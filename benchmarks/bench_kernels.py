@@ -1,0 +1,40 @@
+"""Kernel-level microbenchmarks: fused butterfly vs dense matmul FLOP/byte
+model + CPU timings of the jnp path (Pallas timings require a TPU; the
+VMEM-residency argument is in DESIGN.md §3 and the roofline tables)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import butterfly as bf
+from repro.kernels import ops
+
+
+def run() -> None:
+    B = 128
+    for n in (256, 1024, 4096):
+        w = bf.fjlt_weights(jax.random.PRNGKey(0), n)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, n))
+        W = jax.random.normal(jax.random.PRNGKey(2), (n, n)) / jnp.sqrt(n)
+
+        bfly = jax.jit(lambda x: ops.butterfly_apply(x, w, backend="jnp"))
+        dense = jax.jit(lambda x: x @ W.T)
+        us_b = time_fn(bfly, x)
+        us_d = time_fn(dense, x)
+
+        p = bf.num_stages(n)
+        flops_bfly = 4 * n * p * B          # 2 mul + 2 add per coord/stage
+        flops_dense = 2 * n * n * B
+        # HBM traffic of the fused TPU kernel: x in + out + weights once
+        bytes_bfly = (2 * B * n + 2 * n * p) * 4
+        bytes_dense = (2 * B * n + n * n) * 4
+        emit(f"kernel/butterfly_n{n}", us_b,
+             f"dense_us={us_d:.1f};flop_ratio={flops_dense/flops_bfly:.1f}x;"
+             f"byte_ratio={bytes_dense/bytes_bfly:.1f}x;"
+             f"arith_intensity={flops_bfly/bytes_bfly:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""§5.1 analogue at framework scale: train the smoke LM with a dense head
+vs the butterfly-sandwich head (paper's replacement site) on the synthetic
+LM stream; compare convergence and parameter counts."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import registry
+from repro.configs.base import TrainConfig
+from repro.models import lm
+from repro.runtime import pytree as pt
+from repro.train.trainer import Trainer
+
+
+def run(steps: int = 60) -> None:
+    tc = TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=steps)
+    results = {}
+    for variant in ("smollm-135m-smoke", "smollm-135m-butterfly-smoke"):
+        cfg = registry.get(variant)
+        tr = Trainer(cfg, tc, seq_len=64, global_batch=8)
+        res = tr.run(steps)
+        n_params = pt.param_count(lm.model_specs(cfg))
+        results[variant] = (res.losses, n_params)
+    dense_losses, dense_n = results["smollm-135m-smoke"]
+    bfly_losses, bfly_n = results["smollm-135m-butterfly-smoke"]
+    emit("lm_butterfly/final_loss", 0.0,
+         f"dense={np.mean(dense_losses[-5:]):.4f};"
+         f"butterfly={np.mean(bfly_losses[-5:]):.4f};"
+         f"dense_params={dense_n};butterfly_params={bfly_n}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Figure 1 / Figure 10: parameter counts of the dense layer vs the
+butterfly replacement, at the layer sizes the paper's models use, plus the
+assigned-LM head sizes (our framework's integration point)."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.core import layers as bl
+
+# (model, n1, n2) — final dense layers of the paper's Table 1 architectures
+PAPER_LAYERS = [
+    ("efficientnet-b0", 1280, 10),      # CIFAR-10 head
+    ("preactresnet18", 512, 10),
+    ("seresnet152", 2048, 100),          # CIFAR-100
+    ("senet154", 2048, 1000),            # ImageNet
+    ("flair-tagger-en", 4096, 20),       # CoNLL-03 NER
+    ("flair-tagger-pos", 4096, 50),      # PTB POS
+]
+
+# LM-head sizes of the assigned architectures (d_model -> vocab)
+LM_HEADS = [
+    ("smollm-135m-head", 576, 49152),
+    ("gemma3-27b-head", 5376, 262144),
+    ("mistral-large-head", 12288, 32768),
+    ("olmoe-head", 2048, 50304),
+]
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    for name, n1, n2 in PAPER_LAYERS + LM_HEADS:
+        dense = bl.dense_param_count(n1, n2)
+        spec = bl.make_spec(key, n1, n2)          # paper's k = log2(n)
+        ours = bl.param_count(spec)
+        eff = bl.effective_param_count(spec)
+        emit(f"params/{name}", 0.0,
+             f"dense={dense};butterfly={ours};effective={eff};"
+             f"reduction={dense / max(ours, 1):.1f}x")
+
+
+if __name__ == "__main__":
+    run()

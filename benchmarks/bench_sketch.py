@@ -1,0 +1,94 @@
+"""Paper Figures 7/8 + Table 4 (§6): learned butterfly sketch vs learned
+sparse (IVY19), random CW, Gaussian, and the dense-N learned variant."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import butterfly as bf
+from repro.core import sketch
+
+
+def _datasets(n=64, d=48, t_train=24, t_test=8):
+    out = {}
+    rng = np.random.default_rng(0)
+    # HS-SOD-like: smooth spectra + noise
+    base = rng.normal(size=(n, d)) @ np.diag(np.linspace(1, 0.02, d))
+    out["hyper_like"] = [jnp.asarray(base + 0.05 * rng.normal(size=(n, d)))
+                         for _ in range(t_train + t_test)]
+    # CIFAR-like: block-structured
+    base2 = rng.normal(size=(n, 8)) @ rng.normal(size=(8, d))
+    out["cifar_like"] = [jnp.asarray(base2 + 0.2 * rng.normal(size=(n, d)))
+                         for _ in range(t_train + t_test)]
+    return out, t_train
+
+
+def run(steps: int = 120) -> None:
+    data, t_train = _datasets()
+    ell, k = 16, 8
+    for name, Xs in data.items():
+        train, test = Xs[:t_train], Xs[t_train:]
+        n = train[0].shape[0]
+
+        spec = sketch.make_spec(jax.random.PRNGKey(0), n=n, ell=ell, k=k)
+        w, _ = sketch.train_butterfly_sketch(
+            spec, jax.random.PRNGKey(1), train, steps=steps, lr=3e-3,
+            batch=6)
+        err_bfly = sketch.test_error(
+            lambda X: sketch.butterfly_sketch(spec, w, X), test, k)
+
+        rows, values, _ = sketch.train_sparse_sketch(
+            jax.random.PRNGKey(2), train, n=n, ell=ell, k=k, steps=steps,
+            lr=3e-3, batch=6)
+        Bs = sketch.sparse_sketch_matrix(rows, values, ell)
+        err_sparse = sketch.test_error(lambda X: Bs @ X, test, k)
+
+        rows0, signs0 = sketch.cw_pattern(jax.random.PRNGKey(3), n, ell)
+        B0 = sketch.sparse_sketch_matrix(rows0, jnp.asarray(signs0), ell)
+        err_cw = sketch.test_error(lambda X: B0 @ X, test, k)
+
+        G = sketch.gaussian_sketch(jax.random.PRNGKey(4), n, ell)
+        err_gauss = sketch.test_error(lambda X: G @ X, test, k)
+
+        rowsN, valuesN, _ = sketch.train_sparse_sketch(
+            jax.random.PRNGKey(5), train, n=n, ell=ell, k=k, steps=steps,
+            lr=3e-3, nnz_per_col=ell, batch=6)
+        BN = sketch.sparse_sketch_matrix(rowsN, valuesN, ell)
+        err_dense = sketch.test_error(lambda X: BN @ X, test, k)
+
+        emit(f"sketch/{name}_l{ell}_k{k}", 0.0,
+             f"butterfly_learned={err_bfly:.4f};"
+             f"sparse_learned={err_sparse:.4f};cw_random={err_cw:.4f};"
+             f"gaussian={err_gauss:.4f};dense_learned_N{ell}={err_dense:.4f}")
+
+
+def run_ell_sweep(steps: int = 80) -> None:
+    """Figure 17: error vs ell at k=8."""
+    data, t_train = _datasets()
+    Xs = data["hyper_like"]
+    train, test = Xs[:t_train], Xs[t_train:]
+    n = train[0].shape[0]
+    k = 8
+    for ell in (8, 16, 32):
+        spec = sketch.make_spec(jax.random.PRNGKey(ell), n=n, ell=ell, k=k)
+        w, _ = sketch.train_butterfly_sketch(
+            spec, jax.random.PRNGKey(ell + 1), train, steps=steps, lr=3e-3,
+            batch=6)
+        err_bfly = sketch.test_error(
+            lambda X: sketch.butterfly_sketch(spec, w, X), test, k)
+        rows, values, _ = sketch.train_sparse_sketch(
+            jax.random.PRNGKey(ell + 2), train, n=n, ell=ell, k=k,
+            steps=steps, lr=3e-3, batch=6)
+        Bs = sketch.sparse_sketch_matrix(rows, values, ell)
+        err_sparse = sketch.test_error(lambda X: Bs @ X, test, k)
+        emit(f"sketch_ell/l{ell}_k{k}", 0.0,
+             f"butterfly_learned={err_bfly:.4f};"
+             f"sparse_learned={err_sparse:.4f}")
+
+
+if __name__ == "__main__":
+    run()
+    run_ell_sweep()

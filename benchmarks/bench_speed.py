@@ -1,0 +1,51 @@
+"""Paper Figures 12/13: training/inference time of dense layer vs butterfly
+replacement (CPU timings here; the TPU story is the §Roofline analysis)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import layers as bl
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    B = 64
+    for n in (512, 1024, 2048, 4096):
+        W = jax.random.normal(key, (n, n)) / jnp.sqrt(n)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, n))
+        dense = jax.jit(lambda x: x @ W.T)
+        us_d = time_fn(dense, x)
+
+        spec = bl.make_spec(jax.random.PRNGKey(2), n, n, use_bias=False)
+        params = bl.init_butterfly_linear(jax.random.PRNGKey(3), spec)
+        bfly = jax.jit(lambda x: bl.butterfly_linear_apply(spec, params, x))
+        us_b = time_fn(bfly, x)
+        emit(f"speed/forward_n{n}", us_b,
+             f"dense_us={us_d:.1f};speedup={us_d / us_b:.2f}x")
+
+        # training step (forward+backward+sgd)
+        y = jax.random.normal(jax.random.PRNGKey(4), (B, n))
+
+        @jax.jit
+        def dense_step(W):
+            g = jax.grad(lambda W: jnp.mean((x @ W.T - y) ** 2))(W)
+            return W - 0.1 * g
+
+        @jax.jit
+        def bfly_step(params):
+            g = jax.grad(lambda p: jnp.mean(
+                (bl.butterfly_linear_apply(spec, p, x) - y) ** 2))(params)
+            return jax.tree_util.tree_map(lambda p, g: p - 0.1 * g,
+                                          params, g)
+
+        us_dt = time_fn(dense_step, W)
+        us_bt = time_fn(bfly_step, params)
+        emit(f"speed/train_n{n}", us_bt,
+             f"dense_us={us_dt:.1f};speedup={us_dt / us_bt:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

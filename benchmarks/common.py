@@ -1,0 +1,57 @@
+"""Shared benchmark utilities: timing, CSV emission, data generators."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time (µs) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def gaussian_lowrank(n: int, d: int, rank: int, seed: int = 0,
+                     scale: float = 0.1) -> jnp.ndarray:
+    """Paper §5.2 'Gaussian 1/2' matrices: random rank-r column space."""
+    rng = np.random.default_rng(seed)
+    U = np.linalg.qr(rng.normal(size=(n, rank)))[0]
+    C = rng.normal(scale=scale, size=(rank, d))
+    return jnp.asarray(U @ C, jnp.float32)
+
+
+def synthetic_image_matrix(n: int, d: int, seed: int = 0) -> jnp.ndarray:
+    """MNIST-like stand-in (no offline dataset): smooth low-frequency images
+    + noise, coordinates randomly permuted as in the paper (§5.2)."""
+    rng = np.random.default_rng(seed)
+    side = int(np.sqrt(n))
+    imgs = []
+    for _ in range(d):
+        fx = rng.integers(1, 5, size=2)
+        phase = rng.uniform(0, 2 * np.pi, size=2)
+        xx, yy = np.meshgrid(np.linspace(0, 1, side),
+                             np.linspace(0, 1, side))
+        img = (np.sin(2 * np.pi * fx[0] * xx + phase[0])
+               * np.cos(2 * np.pi * fx[1] * yy + phase[1]))
+        img += 0.1 * rng.normal(size=img.shape)
+        imgs.append(img.reshape(-1)[:n])
+    M = np.stack(imgs, axis=1)
+    perm = rng.permutation(n)
+    return jnp.asarray(M[perm], jnp.float32)

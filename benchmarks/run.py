@@ -1,0 +1,62 @@
+"""Benchmark runner: one section per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV lines (assignment format). Roofline
+numbers come from the dry-run artifacts (``python -m repro.launch.dryrun``)
+— summarized here if present.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import (bench_autoencoder, bench_kernels,  # noqa: E402
+                        bench_lm_butterfly, bench_nonlinear,
+                        bench_param_counts, bench_sketch, bench_speed,
+                        bench_theorem1, bench_two_phase)
+
+
+def summarize_dryrun(out_dir: str = "experiments/dryrun") -> None:
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "skipped":
+            print(f"roofline/{r['arch']}__{r['shape']}__{r['mesh']},0.00,"
+                  f"status=skipped;reason={r['reason']}")
+            continue
+        print(f"roofline/{r['arch']}__{r['shape']}__{r['mesh']},0.00,"
+              f"t_compute={r['t_compute']:.4f};t_memory={r['t_memory']:.4f};"
+              f"t_collective={r['t_collective']:.4f};"
+              f"dominant={r['dominant']};util={r['flops_utilization']:.3f};"
+              f"fit={r['hbm_fit']}")
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    print("name,us_per_call,derived")
+    bench_param_counts.run()
+    bench_theorem1.run()
+    bench_kernels.run()
+    bench_speed.run()
+    bench_nonlinear.run(steps=120 if fast else 300)
+    if fast:
+        bench_autoencoder.run(train_steps=60)
+        bench_two_phase.run(steps1=60, steps2=40)
+        bench_sketch.run(steps=30)
+        bench_lm_butterfly.run(steps=15)
+    else:
+        bench_autoencoder.run()
+        bench_two_phase.run()
+        bench_sketch.run()
+        bench_sketch.run_ell_sweep()
+        bench_lm_butterfly.run()
+    summarize_dryrun()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Batched serving demo: prefill a prompt batch, then step-decode greedily
+with per-layer KV/state caches (same serve_step the dry-run lowers).
+
+Run: ``PYTHONPATH=src python examples/serve_lm.py --arch smollm-135m-smoke``
+Try ``--arch recurrentgemma-2b-smoke`` (RG-LRU state + ring-buffer window
+cache) or ``--arch xlstm-125m-smoke`` (matrix-memory state, O(1) decode).
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.models import lm
+    from repro.runtime import pytree as pt
+    from repro.train import steps as steps_lib
+
+    cfg = registry.get(args.arch)
+    params = pt.init_params(jax.random.PRNGKey(0), lm.model_specs(cfg))
+    B, S, T = args.batch, args.prompt_len, args.gen_len
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["frontend_embeds"] = jnp.asarray(rng.normal(
+            size=(B, cfg.frontend_tokens, cfg.d_model)), jnp.float32)
+    if cfg.n_enc_layers:
+        batch["frames"] = jnp.asarray(rng.normal(
+            size=(B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+
+    caches = lm.init_caches(cfg, B, S + T)
+    prefill = jax.jit(steps_lib.make_prefill_step(cfg))
+    serve = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(2,))
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, batch, caches)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    extra = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    generated = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for t in range(T - 1):
+        tok, logits, caches = serve(params, tok, caches,
+                                    jnp.asarray(S + extra + t, jnp.int32))
+        generated.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.stack(generated, axis=1)
+    print(f"arch={cfg.name}  batch={B}  prompt={S}  generated={T}")
+    print(f"prefill: {t_prefill * 1e3:.1f} ms   "
+          f"decode: {t_decode / max(T - 1, 1) * 1e3:.1f} ms/token")
+    for b in range(min(B, 2)):
+        print(f"  seq[{b}]: {gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

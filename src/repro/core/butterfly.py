@@ -1,0 +1,287 @@
+"""Core butterfly-network math (paper §3).
+
+A butterfly network over ``n = 2^p`` coordinates is a product of ``p`` sparse
+stage matrices ``B = B_{p-1} · ... · B_1 · B_0``. Stage ``s`` connects every
+index ``i`` with its partner ``i XOR 2^s`` through a trainable 2x2 gadget.
+
+We parametrize each stage with two length-``n`` weight vectors ``a_s`` (self
+coefficient) and ``b_s`` (partner coefficient), stacked into a single array of
+shape ``(p, 2, n)``::
+
+    (B_s x)[i] = a_s[i] * x[i] + b_s[i] * x[i ^ 2^s]
+
+This matches the paper exactly: each stage has ``2n`` trainable weights
+(Definition 3.1), and the FJLT construction (Hadamard stages + random signs)
+is a particular weight assignment (``fjlt_weights``).
+
+Everything in this file is pure jnp and differentiable; it doubles as the
+oracle for the Pallas kernels in ``repro.kernels``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "num_stages",
+    "padded_dim",
+    "stage_swap",
+    "butterfly_apply",
+    "butterfly_transpose_apply",
+    "fjlt_weights",
+    "identity_weights",
+    "random_weights",
+    "truncation_indices",
+    "truncate",
+    "untruncate",
+    "materialize",
+    "materialize_truncated",
+    "effective_param_count",
+    "effective_param_bound",
+]
+
+
+def num_stages(n: int) -> int:
+    """Number of butterfly stages ``p = log2(n)`` for a power-of-two ``n``."""
+    p = int(round(math.log2(n)))
+    if 2**p != n:
+        raise ValueError(f"butterfly dimension must be a power of two, got {n}")
+    return p
+
+
+def padded_dim(n: int) -> int:
+    """Smallest power of two >= n (paper footnote 4)."""
+    if n <= 1:
+        return 1
+    return 1 << (n - 1).bit_length()
+
+
+def stage_swap(x: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Swap each element with its stage partner: ``y[i] = x[i ^ stride]``.
+
+    Works on the last axis. ``stride`` must be a power of two dividing ``n/2``.
+    Implemented as reshape + axis-flip which lowers to cheap strided moves on
+    TPU (no gather).
+    """
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    xs = x.reshape(*lead, n // (2 * stride), 2, stride)
+    xs = jnp.flip(xs, axis=-2)
+    return xs.reshape(*lead, n)
+
+
+def _check_weights(w: jnp.ndarray) -> Tuple[int, int]:
+    p, two, n = w.shape[-3:]
+    if two != 2 or 2**p != n:
+        raise ValueError(f"weights must have shape (log2 n, 2, n); got {w.shape}")
+    return p, n
+
+
+def butterfly_apply(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply the full butterfly ``B x`` along the last axis of ``x``.
+
+    ``w``: (p, 2, n) stage weights. ``x``: (..., n). Stage 0 acts first.
+    """
+    p, n = _check_weights(w)
+    if x.shape[-1] != n:
+        raise ValueError(f"x last dim {x.shape[-1]} != butterfly dim {n}")
+    for s in range(p):
+        a = w[s, 0]
+        b = w[s, 1]
+        x = a * x + b * stage_swap(x, 1 << s)
+    return x
+
+
+def butterfly_apply_nonlinear(w: jnp.ndarray, x: jnp.ndarray,
+                              act=jax.nn.gelu) -> jnp.ndarray:
+    """Butterfly with non-linear gates between stages (paper §7 future
+    work): ``x ← act(B_s x)`` for all but the last stage. Same parameter
+    count as the linear butterfly; turns the layer into a log-depth MLP
+    with fixed sparse connectivity."""
+    p, n = _check_weights(w)
+    if x.shape[-1] != n:
+        raise ValueError(f"x last dim {x.shape[-1]} != butterfly dim {n}")
+    for s in range(p):
+        a = w[s, 0]
+        b = w[s, 1]
+        x = a * x + b * stage_swap(x, 1 << s)
+        if s < p - 1:
+            x = act(x)
+    return x
+
+
+def butterfly_transpose_apply(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply the transposed butterfly ``Bᵀ x``.
+
+    ``Bᵀ = B_0ᵀ · B_1ᵀ · ... · B_{p-1}ᵀ`` and each transposed stage is
+    ``(B_sᵀ x)[i] = a_s[i]·x[i] + b_s[i^2^s]·x[i^2^s]``, i.e.
+    ``a ⊙ x + swap(b ⊙ x)``.
+    """
+    p, n = _check_weights(w)
+    if x.shape[-1] != n:
+        raise ValueError(f"x last dim {x.shape[-1]} != butterfly dim {n}")
+    for s in reversed(range(p)):
+        a = w[s, 0]
+        b = w[s, 1]
+        x = a * x + stage_swap(b * x, 1 << s)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Weight initializers
+# ---------------------------------------------------------------------------
+
+def _hadamard_signs(n: int) -> np.ndarray:
+    """Per-stage self-coefficient signs for the normalized Hadamard transform.
+
+    Stage ``s`` gadget on pair ``(u, v)`` (bit s of u is 0, of v is 1)::
+
+        y_u = (x_u + x_v)/sqrt(2)     y_v = (x_u - x_v)/sqrt(2)
+
+    so ``a_s[i] = ±1/sqrt(2)`` (sign = +1 iff bit s of i is 0) and
+    ``b_s[i] = 1/sqrt(2)``.
+    """
+    idx = np.arange(n)
+    p = num_stages(n)
+    signs = np.empty((p, n), dtype=np.float64)
+    for s in range(p):
+        signs[s] = 1.0 - 2.0 * ((idx >> s) & 1)
+    return signs
+
+
+def fjlt_weights(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Sample butterfly weights from the FJLT distribution.
+
+    Returns stage weights computing ``(1/sqrt(n)) · H · D`` where ``H`` is the
+    Walsh–Hadamard transform and ``D`` a random ±1 diagonal. The diagonal is
+    absorbed into stage 0 (paper footnote 5). The result is an orthogonal
+    matrix, so ``butterfly_apply`` with these weights preserves norms exactly.
+    """
+    p = num_stages(n)
+    inv_sqrt2 = 1.0 / math.sqrt(2.0)
+    signs = _hadamard_signs(n)
+    a = signs * inv_sqrt2                      # (p, n)
+    b = np.full((p, n), inv_sqrt2)
+    d = jax.random.rademacher(key, (n,), dtype=jnp.float32)
+    d = np.asarray(d)
+    # stage 0: (B_0 D x)[i] = a0[i]·d[i]·x[i] + b0[i]·d[i^1]·x[i^1]
+    a[0] = a[0] * d
+    b[0] = b[0] * d[np.arange(n) ^ 1]
+    w = np.stack([a, b], axis=1)               # (p, 2, n)
+    return jnp.asarray(w, dtype=dtype)
+
+
+def identity_weights(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Stage weights that make the butterfly the identity map."""
+    p = num_stages(n)
+    w = np.zeros((p, 2, n))
+    w[:, 0, :] = 1.0
+    return jnp.asarray(w, dtype=dtype)
+
+
+def random_weights(key: jax.Array, n: int, scale: Optional[float] = None,
+                   dtype=jnp.float32) -> jnp.ndarray:
+    """Gaussian stage weights; default scale keeps the product ~isometric.
+
+    Each stage output coordinate mixes two inputs, so variance 1/2 per weight
+    keeps E||B_s x||² = ||x||².
+    """
+    p = num_stages(n)
+    if scale is None:
+        scale = 1.0 / math.sqrt(2.0)
+    return scale * jax.random.normal(key, (p, 2, n), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Truncation (the "T" in the truncated butterfly network)
+# ---------------------------------------------------------------------------
+
+def truncation_indices(key: jax.Array, n: int, ell: int) -> Tuple[int, ...]:
+    """Sample ``ell`` output coordinates uniformly without replacement (fixed
+    for the lifetime of the layer, per §3.1)."""
+    if ell > n:
+        raise ValueError(f"truncation {ell} > dim {n}")
+    idx = jax.random.choice(key, n, shape=(ell,), replace=False)
+    return tuple(int(i) for i in np.sort(np.asarray(idx)))
+
+
+def truncate(x: jnp.ndarray, idx: Sequence[int], n: int,
+             jl_scale: bool = True) -> jnp.ndarray:
+    """Project onto the fixed coordinate subset, with the JL normalization
+    ``sqrt(n/ell)`` so that FJLT weights give an expected isometry."""
+    ind = jnp.asarray(idx, dtype=jnp.int32)
+    y = jnp.take(x, ind, axis=-1)
+    if jl_scale:
+        y = y * math.sqrt(n / len(idx))
+    return y
+
+
+def untruncate(y: jnp.ndarray, idx: Sequence[int], n: int,
+               jl_scale: bool = True) -> jnp.ndarray:
+    """Transpose of :func:`truncate`: scatter ``ell`` values into ``n`` slots."""
+    ind = jnp.asarray(idx, dtype=jnp.int32)
+    if jl_scale:
+        y = y * math.sqrt(n / len(idx))
+    shape = y.shape[:-1] + (n,)
+    out = jnp.zeros(shape, dtype=y.dtype)
+    return out.at[..., ind].set(y)
+
+
+# ---------------------------------------------------------------------------
+# Dense materialization (for oracles/analysis; O(n^2) memory, test-sized only)
+# ---------------------------------------------------------------------------
+
+def materialize(w: jnp.ndarray) -> jnp.ndarray:
+    """Return the dense ``n x n`` matrix ``B`` such that ``B @ x ==
+    butterfly_apply(w, x)``."""
+    _, n = _check_weights(w)
+    eye = jnp.eye(n, dtype=w.dtype)
+    # columns of B are B @ e_j; butterfly_apply maps rows, so vmap over rows of
+    # identity and transpose.
+    cols = jax.vmap(lambda e: butterfly_apply(w, e))(eye)  # row j = B·e_j
+    return cols.T
+
+
+def materialize_truncated(w: jnp.ndarray, idx: Sequence[int],
+                          jl_scale: bool = True) -> jnp.ndarray:
+    """Dense ``ell x n`` matrix of the truncated butterfly ``T ∘ B``."""
+    _, n = _check_weights(w)
+    B = materialize(w)
+    M = B[jnp.asarray(idx, dtype=jnp.int32), :]
+    if jl_scale:
+        M = M * math.sqrt(n / len(idx))
+    return M
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (paper Appendix F)
+# ---------------------------------------------------------------------------
+
+def effective_param_count(n: int, idx: Sequence[int]) -> int:
+    """Exact number of weights lying on a path from some input to a kept
+    output (the "effective" trainable weights of the truncated network).
+
+    Computed by backward reachability through the stages. Appendix F proves
+    this is at most ``2 n log2(ell) + 6 n``.
+    """
+    p = num_stages(n)
+    alive = np.zeros(n, dtype=bool)
+    alive[list(idx)] = True
+    total = 0
+    for s in reversed(range(p)):
+        # each alive node at stage-output s has 2 incoming weights
+        total += 2 * int(alive.sum())
+        prev = alive | alive[np.arange(n) ^ (1 << s)]
+        alive = prev
+    return total
+
+
+def effective_param_bound(n: int, ell: int) -> int:
+    """Appendix F upper bound ``2 n log2(ell) + 6 n``."""
+    return int(2 * n * max(math.log2(max(ell, 2)), 1) + 6 * n)

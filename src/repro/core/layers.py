@@ -1,0 +1,181 @@
+"""The paper's dense-layer replacement (§3.2): the butterfly "sandwich".
+
+A dense ``n2 x n1`` layer ``W`` is replaced by ``J2ᵀ · W' · J1`` where
+
+* ``J1`` is a ``k1 x n1`` truncated butterfly network,
+* ``W'`` is a small dense ``k2 x k1`` core,
+* ``J2ᵀ`` is the transpose of a ``k2 x n2`` truncated butterfly network.
+
+Proposition 3.1 guarantees that with FJLT-initialized ``J1, J2`` and core
+``W' = J2 W J1ᵀ`` the sandwich approximates the action of ``W`` on any vector
+w.h.p. Parameters drop from ``n1·n2`` to ``2·N1·log2(N1) + 2·N2·log2(N2) +
+k1·k2`` (N = padded power-of-two dims), i.e. near-linear.
+
+The module is functional: a hashable static :class:`ButterflySpec` plus a
+params dict, so it nests anywhere in a model param tree and composes with
+pjit (weights are tiny and replicated; activations shard on batch axes).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import butterfly as bf
+
+__all__ = [
+    "ButterflySpec",
+    "make_spec",
+    "init_butterfly_linear",
+    "butterfly_linear_apply",
+    "butterfly_linear_materialize",
+    "param_count",
+    "dense_param_count",
+    "init_from_dense",
+]
+
+
+@dataclass(frozen=True)
+class ButterflySpec:
+    """Static configuration of one butterfly sandwich layer.
+
+    Truncation index sets are part of the *spec* (fixed at init, never
+    trained), so the spec is hashable and can be closed over by jit.
+    """
+
+    n_in: int
+    n_out: int
+    k_in: int
+    k_out: int
+    idx_in: Tuple[int, ...]
+    idx_out: Tuple[int, ...]
+    use_bias: bool = True
+    jl_scale: bool = True
+
+    @property
+    def pad_in(self) -> int:
+        return bf.padded_dim(self.n_in)
+
+    @property
+    def pad_out(self) -> int:
+        return bf.padded_dim(self.n_out)
+
+
+def default_k(n: int, k_factor: float = 1.0) -> int:
+    """The paper's choice ``k = log2(n)``, scaled by ``k_factor`` for
+    quality/perf trade-offs. Clamped to [1, n]."""
+    k = max(1, int(round(k_factor * math.log2(max(n, 2)))))
+    return min(k, n)
+
+
+def make_spec(key: jax.Array, n_in: int, n_out: int,
+              k_in: Optional[int] = None, k_out: Optional[int] = None,
+              k_factor: float = 1.0, use_bias: bool = True) -> ButterflySpec:
+    k_in = default_k(n_in, k_factor) if k_in is None else k_in
+    k_out = default_k(n_out, k_factor) if k_out is None else k_out
+    k1, k2 = jax.random.split(key)
+    idx_in = bf.truncation_indices(k1, bf.padded_dim(n_in), k_in)
+    idx_out = bf.truncation_indices(k2, bf.padded_dim(n_out), k_out)
+    return ButterflySpec(n_in=n_in, n_out=n_out, k_in=k_in, k_out=k_out,
+                         idx_in=idx_in, idx_out=idx_out, use_bias=use_bias)
+
+
+def init_butterfly_linear(key: jax.Array, spec: ButterflySpec,
+                          dtype=jnp.float32) -> dict:
+    """FJLT init for both butterflies; PyTorch-style kaiming-uniform core."""
+    kb1, kb2, kc = jax.random.split(key, 3)
+    params = {
+        "b_in": bf.fjlt_weights(kb1, spec.pad_in, dtype=dtype),
+        "b_out": bf.fjlt_weights(kb2, spec.pad_out, dtype=dtype),
+        "core": _kaiming_uniform(kc, (spec.k_out, spec.k_in), dtype=dtype),
+    }
+    if spec.use_bias:
+        params["bias"] = jnp.zeros((spec.n_out,), dtype=dtype)
+    return params
+
+
+def _kaiming_uniform(key: jax.Array, shape, dtype) -> jnp.ndarray:
+    fan_in = shape[1]
+    bound = math.sqrt(1.0 / fan_in)
+    return jax.random.uniform(key, shape, minval=-bound, maxval=bound,
+                              dtype=dtype)
+
+
+def init_from_dense(key: jax.Array, spec: ButterflySpec, W: jnp.ndarray,
+                    dtype=jnp.float32) -> dict:
+    """Initialize so the sandwich approximates a given dense ``W`` (n2 x n1):
+    FJLT butterflies and core ``W' = J2 W J1ᵀ`` (Proposition 3.1)."""
+    kb1, kb2 = jax.random.split(key)
+    b_in = bf.fjlt_weights(kb1, spec.pad_in, dtype=jnp.float32)
+    b_out = bf.fjlt_weights(kb2, spec.pad_out, dtype=jnp.float32)
+    J1 = bf.materialize_truncated(b_in, spec.idx_in, spec.jl_scale)
+    J1 = J1[:, : spec.n_in]
+    J2 = bf.materialize_truncated(b_out, spec.idx_out, spec.jl_scale)
+    J2 = J2[:, : spec.n_out]
+    core = J2 @ W @ J1.T
+    params = {
+        "b_in": b_in.astype(dtype),
+        "b_out": b_out.astype(dtype),
+        "core": core.astype(dtype),
+    }
+    if spec.use_bias:
+        params["bias"] = jnp.zeros((spec.n_out,), dtype=dtype)
+    return params
+
+
+def butterfly_linear_apply(spec: ButterflySpec, params: dict,
+                           x: jnp.ndarray) -> jnp.ndarray:
+    """Apply the sandwich along the last axis: (..., n_in) -> (..., n_out)."""
+    if x.shape[-1] != spec.n_in:
+        raise ValueError(f"expected last dim {spec.n_in}, got {x.shape[-1]}")
+    # pad to power of two
+    if spec.pad_in != spec.n_in:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, spec.pad_in - spec.n_in)]
+        x = jnp.pad(x, pad)
+    h = bf.butterfly_apply(params["b_in"].astype(x.dtype), x)
+    h = bf.truncate(h, spec.idx_in, spec.pad_in, spec.jl_scale)      # (..., k1)
+    h = jnp.einsum("...i,oi->...o", h, params["core"].astype(x.dtype))
+    z = bf.untruncate(h, spec.idx_out, spec.pad_out, spec.jl_scale)  # (..., N2)
+    z = bf.butterfly_transpose_apply(params["b_out"].astype(x.dtype), z)
+    if spec.pad_out != spec.n_out:
+        z = z[..., : spec.n_out]
+    if spec.use_bias and "bias" in params:
+        z = z + params["bias"].astype(x.dtype)
+    return z
+
+
+def butterfly_linear_materialize(spec: ButterflySpec, params: dict
+                                 ) -> jnp.ndarray:
+    """Dense (n_out x n_in) equivalent of the sandwich (tests/analysis)."""
+    J1 = bf.materialize_truncated(params["b_in"], spec.idx_in, spec.jl_scale)
+    J1 = J1[:, : spec.n_in]
+    J2 = bf.materialize_truncated(params["b_out"], spec.idx_out, spec.jl_scale)
+    J2 = J2[:, : spec.n_out]
+    return J2.T @ params["core"] @ J1
+
+
+def param_count(spec: ButterflySpec) -> int:
+    """Trainable parameter count of the sandwich (stored weights)."""
+    p1 = bf.num_stages(spec.pad_in)
+    p2 = bf.num_stages(spec.pad_out)
+    n = 2 * spec.pad_in * p1 + 2 * spec.pad_out * p2 + spec.k_in * spec.k_out
+    if spec.use_bias:
+        n += spec.n_out
+    return n
+
+
+def effective_param_count(spec: ButterflySpec) -> int:
+    """Effective (on-path) weights per Appendix F, for both butterflies."""
+    return (bf.effective_param_count(spec.pad_in, spec.idx_in)
+            + bf.effective_param_count(spec.pad_out, spec.idx_out)
+            + spec.k_in * spec.k_out
+            + (spec.n_out if spec.use_bias else 0))
+
+
+def dense_param_count(n_in: int, n_out: int, use_bias: bool = True) -> int:
+    return n_in * n_out + (n_out if use_bias else 0)

@@ -1,0 +1,60 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Backend selection:
+
+* On TPU the compiled Pallas kernels run (Mosaic).
+* On CPU (this container) the *pure-jnp oracles* run for production paths
+  (Pallas interpret mode executes the kernel body in Python — correct but
+  slow), while tests explicitly request ``backend="pallas_interpret"`` to
+  validate the kernel bodies themselves.
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.butterfly import butterfly_matmul as _butterfly_pallas
+from repro.kernels.sandwich import sandwich_matmul as _sandwich_pallas
+from repro.kernels.sandwich import one_hot_select
+
+Backend = Literal["auto", "jnp", "pallas", "pallas_interpret"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def butterfly_apply(x: jnp.ndarray, w: jnp.ndarray, *,
+                    transpose: bool = False,
+                    backend: Backend = "auto") -> jnp.ndarray:
+    """Fused butterfly product over the last axis of ``x``."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "jnp":
+        return _ref.butterfly_ref(w.astype(x.dtype), x, transpose=transpose)
+    interpret = backend == "pallas_interpret"
+    return _butterfly_pallas(x, w, transpose=transpose, interpret=interpret)
+
+
+def sandwich_apply(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
+                   core: jnp.ndarray, sel_out: jnp.ndarray,
+                   b_out: jnp.ndarray, *, scale_in: float = 1.0,
+                   scale_out: float = 1.0,
+                   backend: Backend = "auto") -> jnp.ndarray:
+    """Fused butterfly sandwich (dense-layer replacement) over the last axis."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "jnp":
+        return _ref.sandwich_ref(x, b_in, core, b_out, sel_in, sel_out,
+                                 scale_in, scale_out)
+    interpret = backend == "pallas_interpret"
+    return _sandwich_pallas(x, b_in, sel_in, core, sel_out, b_out,
+                            scale_in=scale_in, scale_out=scale_out,
+                            interpret=interpret)
+
+
+__all__ = ["butterfly_apply", "sandwich_apply", "one_hot_select", "Backend"]

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth used by tests (``assert_allclose`` sweeps) and the
+CPU fallback used by :mod:`repro.kernels.ops` when no TPU is present.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import butterfly as bf
+
+
+def butterfly_ref(w: jnp.ndarray, x: jnp.ndarray,
+                  transpose: bool = False) -> jnp.ndarray:
+    """Oracle for the fused multi-stage butterfly kernel.
+
+    ``x``: (..., n); ``w``: (p, 2, n).
+    """
+    if transpose:
+        return bf.butterfly_transpose_apply(w, x)
+    return bf.butterfly_apply(w, x)
+
+
+def sandwich_ref(x: jnp.ndarray, b_in: jnp.ndarray, core: jnp.ndarray,
+                 b_out: jnp.ndarray, sel_in: jnp.ndarray,
+                 sel_out: jnp.ndarray, scale_in: float,
+                 scale_out: float) -> jnp.ndarray:
+    """Oracle for the fused sandwich kernel.
+
+    ``sel_in``: (n1, k1) one-hot selection, ``sel_out``: (k2, n2) one-hot
+    scatter; scales are the JL normalizations sqrt(n/k).
+    """
+    h = bf.butterfly_apply(b_in.astype(x.dtype), x)
+    h = (h @ sel_in.astype(x.dtype)) * jnp.asarray(scale_in, x.dtype)
+    h = jnp.einsum("...i,oi->...o", h, core.astype(x.dtype))
+    z = (h @ sel_out.astype(x.dtype)) * jnp.asarray(scale_out, x.dtype)
+    return bf.butterfly_transpose_apply(b_out.astype(x.dtype), z)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Oracle for the flash-attention kernel.
+
+    q: (B, H, S, D), k/v: (B, H, S, D) (kv heads already repeated).
+    ``window`` > 0 limits attention to the last ``window`` positions.
+    """
+    B, H, S, D = q.shape
+    if scale is None:
+        scale = D ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)

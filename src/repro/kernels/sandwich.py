@@ -1,0 +1,103 @@
+"""Fused butterfly-sandwich Pallas kernel (TPU target).
+
+Computes the paper's full dense-layer replacement ``J2ᵀ · W' · J1 · x`` in a
+single VMEM residency per activation tile:
+
+    butterfly(b_in) → truncate (one-hot MXU matmul) → small dense core (MXU)
+    → scatter (one-hot MXU matmul) → transposed butterfly(b_out)
+
+Truncation/scatter are lowered as multiplications with fixed one-hot matrices
+(``sel_in``: (n1, k1), ``sel_out``: (k2, n2)) — TPU has no fast dynamic
+gather across lanes, but one-hot matmuls ride the MXU (DESIGN.md §3).
+
+Five HBM round trips (one per op in the unfused jnp path) collapse into one.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.butterfly import num_stages
+from repro.kernels.butterfly import _swap_halves, DEFAULT_BLOCK_B
+
+
+def _sandwich_kernel(x_ref, w_in_ref, sel_in_ref, core_ref, sel_out_ref,
+                     w_out_ref, o_ref, *, stages_in: int, stages_out: int,
+                     scale_in: float, scale_out: float):
+    x = x_ref[...]                                        # (bb, n1)
+    for s in range(stages_in):
+        a = w_in_ref[s, 0, :]
+        b = w_in_ref[s, 1, :]
+        x = a * x + b * _swap_halves(x, 1 << s)
+    h = jnp.dot(x, sel_in_ref[...],
+                preferred_element_type=jnp.float32)       # (bb, k1)
+    h = h * scale_in
+    h = jnp.dot(h, core_ref[...].T.astype(h.dtype),
+                preferred_element_type=jnp.float32)       # (bb, k2)
+    z = jnp.dot(h, sel_out_ref[...].astype(h.dtype),
+                preferred_element_type=jnp.float32)       # (bb, n2)
+    z = (z * scale_out).astype(x.dtype)
+    for s in reversed(range(stages_out)):
+        a = w_out_ref[s, 0, :]
+        b = w_out_ref[s, 1, :]
+        z = a * z + _swap_halves(b * z, 1 << s)
+    o_ref[...] = z
+
+
+def one_hot_select(idx, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """(n, k) one-hot matrix with column j selecting coordinate idx[j]."""
+    sel = np.zeros((n, len(idx)), dtype=np.float32)
+    sel[np.asarray(idx), np.arange(len(idx))] = 1.0
+    return jnp.asarray(sel, dtype=dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale_in", "scale_out",
+                                             "block_b", "interpret"))
+def sandwich_matmul(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
+                    core: jnp.ndarray, sel_out: jnp.ndarray,
+                    b_out: jnp.ndarray, *, scale_in: float = 1.0,
+                    scale_out: float = 1.0, block_b: int = DEFAULT_BLOCK_B,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Fused sandwich over the last axis: (..., n1) -> (..., n2).
+
+    ``b_in``: (p1, 2, n1); ``sel_in``: (n1, k1); ``core``: (k2, k1);
+    ``sel_out``: (k2, n2); ``b_out``: (p2, 2, n2). n1/n2 powers of two.
+    """
+    p1, _, n1 = b_in.shape
+    p2, _, n2 = b_out.shape
+    k1 = sel_in.shape[1]
+    k2 = sel_out.shape[0]
+    assert core.shape == (k2, k1), (core.shape, k1, k2)
+    lead = x.shape[:-1]
+    b = int(np.prod(lead)) if lead else 1
+    x2 = x.reshape(b, n1)
+    bb = min(block_b, b)
+    padded_b = -(-b // bb) * bb
+    if padded_b != b:
+        x2 = jnp.pad(x2, ((0, padded_b - b), (0, 0)))
+    grid = (padded_b // bb,)
+    out = pl.pallas_call(
+        functools.partial(_sandwich_kernel, stages_in=num_stages(n1),
+                          stages_out=num_stages(n2),
+                          scale_in=scale_in, scale_out=scale_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n1), lambda i: (i, 0)),
+            pl.BlockSpec((p1, 2, n1), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n1, k1), lambda i: (0, 0)),
+            pl.BlockSpec((k2, k1), lambda i: (0, 0)),
+            pl.BlockSpec((k2, n2), lambda i: (0, 0)),
+            pl.BlockSpec((p2, 2, n2), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_b, n2), x.dtype),
+        interpret=interpret,
+    )(x2, b_in.astype(x.dtype), sel_in.astype(x.dtype), core,
+      sel_out, b_out.astype(x.dtype))
+    return out[:b].reshape(*lead, n2)

@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — required because the
+dry-run must set XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single-pod 16x16 (data, model) or 2-pod 2x16x16 (pod, data, model).
+
+    256 chips/pod (TPU v5e pod slice); the multi-pod mesh prepends a DCN
+    ``pod`` axis that composes with ``data`` for cross-pod data parallelism.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices but only {len(devices)} are "
+            f"visible; the dry-run entrypoint must set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={ndev} before "
+            f"importing jax")
+    return jax.make_mesh(shape, axes, devices=devices[:ndev],
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None) -> Mesh:
+    """General mesh helper used by tests and the elastic re-mesh planner."""
+    devices = list(devices if devices is not None else jax.devices())
+    ndev = int(np.prod(shape))
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices[:ndev],
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def single_device_mesh() -> Mesh:
+    """1-device mesh with the production axis names (smoke tests)."""
+    return make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,103 @@
+"""Generate the EXPERIMENTS.md dry-run/roofline tables from the JSON
+artifacts (``python -m repro.launch.report [dir ...]``)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load(d: str) -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_bytes(b) -> str:
+    return f"{b / 1e9:.2f}"
+
+
+def roofline_table(records: List[Dict], mesh: str) -> str:
+    lines = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | dominant "
+        "| MODEL/HLO flops | roofline frac | HBM GB/dev | fit |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r["mesh"] != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | — | {r['reason']} |")
+            continue
+        hbm = (r["argument_bytes"] + r["temp_bytes"] + r["output_bytes"]
+               - r["alias_bytes"]) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute'] * 1e3:.1f} "
+            f"| {r['t_memory'] * 1e3:.1f} | {r['t_collective'] * 1e3:.1f} "
+            f"| {r['dominant']} | {r['flops_utilization']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {hbm:.1f} "
+            f"| {'✅' if r['hbm_fit'] else '❌'} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(records: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile s | FLOPs/dev | HBM "
+        "GB/dev | ICI GB | DCN GB | collectives |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"skipped | — | — | — | — | — | {r['reason']} |")
+            continue
+        colls = ", ".join(f"{k}×{v}" for k, v in
+                          sorted(r["collective_counts"].items()))
+        hbm = (r["argument_bytes"] + r["temp_bytes"] + r["output_bytes"]
+               - r["alias_bytes"]) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r.get('compile_seconds', 0):.1f} "
+            f"| {r['flops_per_device']:.2e} | {hbm:.1f} "
+            f"| {r['collective_ici_bytes'] / 1e9:.2f} "
+            f"| {r['collective_dcn_bytes'] / 1e9:.2f} | {colls} |")
+    return "\n".join(lines)
+
+
+def diff_table(base: List[Dict], new: List[Dict], cells: List) -> str:
+    bmap = {(r["arch"], r["shape"], r["mesh"]): r for r in base}
+    nmap = {(r["arch"], r["shape"], r["mesh"]): r for r in new}
+    lines = ["| cell | term | before | after | Δ |", "|---|---|---|---|---|"]
+    for key in cells:
+        b, n = bmap.get(tuple(key)), nmap.get(tuple(key))
+        if not b or not n or b.get("status") != "ok":
+            continue
+        for term in ("t_compute", "t_memory", "t_collective"):
+            tb, tn = b[term] * 1e3, n[term] * 1e3
+            if tb == 0 and tn == 0:
+                continue
+            d = (tb - tn) / tb * 100 if tb else 0.0
+            lines.append(f"| {key[0]} × {key[1]} | {term[2:]} | {tb:.1f} ms "
+                         f"| {tn:.1f} ms | {d:+.0f}% |")
+    return "\n".join(lines)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    records = load(d)
+    print("## Single-pod roofline (16x16)\n")
+    print(roofline_table(records, "pod16x16"))
+    print("\n## Multi-pod roofline (2x16x16)\n")
+    print(roofline_table(records, "pod2x16x16"))
+    print("\n## Dry-run detail\n")
+    print(dryrun_table(records))
+
+
+if __name__ == "__main__":
+    main()

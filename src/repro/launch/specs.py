@@ -1,0 +1,170 @@
+"""Abstract input specs + sharding trees for AOT lowering (dry-run + launch).
+
+Everything here is ``ShapeDtypeStruct``-only: no device allocation ever
+happens for the full-size configs (they are exercised exclusively through
+``jit(...).lower().compile()``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.runtime import pytree as pt
+from repro.runtime import sharding as sh
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Batch input specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Training/prefill batch: ShapeDtypeStructs for every model input."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if shape.kind == "train":
+        out["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        out["mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    if cfg.frontend == "vision":
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.n_enc_layers:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple:
+    """(token, caches, cur_pos) ShapeDtypeStructs for a serve step."""
+    B, S = shape.global_batch, shape.seq_len
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    caches = lm.cache_specs(cfg, B, S)
+    cur_pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, caches, cur_pos
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    rules) -> Dict:
+    specs = batch_specs(cfg, shape)
+
+    def shard(sds):
+        axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+        return NamedSharding(mesh, sh.logical_to_pspec(
+            axes, sds.shape, mesh, rules))
+
+    return {k: shard(v) for k, v in specs.items()}
+
+
+_CACHE_AXES = {
+    "h": ("batch", "rnn_state"),
+    "conv": ("batch", None, "rnn_state"),
+    "C": ("batch", "heads", None, None),
+    "n": ("batch", "heads", None),
+    "m": ("batch", "heads"),
+    "c": ("batch", None),
+}
+
+
+def _cache_leaf_axes(cfg: ModelConfig, key: str, ndim: int) -> Tuple:
+    if key in ("k", "v"):
+        # must match the attention-side constraint exactly (see
+        # repro.models.attention.kv_layout): mixed layouts make GSPMD
+        # reshard the whole cache stack inside the decode loop.
+        from repro.models.attention import kv_layout
+        axes = kv_layout(cfg, "decode")
+    else:
+        axes = _CACHE_AXES.get(key, ("batch",) + (None,) * (ndim - 1))
+    if len(axes) < ndim:                      # stacked leading repeat axis
+        axes = (None,) * (ndim - len(axes)) + tuple(axes)
+    return tuple(axes[:ndim])
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    rules) -> PyTree:
+    _, caches, _ = decode_specs(cfg, shape)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if isinstance(v, jax.ShapeDtypeStruct):
+                    axes = _cache_leaf_axes(cfg, k, len(v.shape))
+                    out[k] = NamedSharding(mesh, sh.logical_to_pspec(
+                        axes, v.shape, mesh, rules))
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if node is None:
+            return None
+        raise TypeError(type(node))
+
+    return walk(caches)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules) -> PyTree:
+    specs = lm.model_specs(cfg)
+    return sh.spec_shardings(specs, mesh, rules)
+
+
+def abstract_model(cfg: ModelConfig) -> PyTree:
+    return pt.abstract_params(lm.model_specs(cfg))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (for roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total, active) parameter counts; active discounts unrouted experts."""
+    specs = lm.model_specs(cfg)
+    total = pt.param_count(specs)
+    active = total
+    if cfg.n_experts and cfg.top_k:
+        expert_params = (cfg.n_layers * cfg.n_experts * 3
+                         * cfg.d_model * cfg.d_ff)
+        active = total - expert_params \
+            + cfg.n_layers * cfg.top_k * 3 * cfg.d_model * cfg.d_ff
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, n_devices: int
+                ) -> Tuple[float, int]:
+    """(per-device MODEL_FLOPS, tokens): 6·N_active·D for training,
+    2·N_active·D forward-only for prefill/decode."""
+    total, active = param_counts(cfg)
+    # embedding gather is not a matmul: discount embed (and tied head) params
+    embed = cfg.vocab_size * cfg.d_model
+    matmul_params = active - embed
+    if not cfg.tie_embeddings:
+        matmul_params = matmul_params      # untied head IS a matmul
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        factor = 2.0
+    return factor * matmul_params * tokens / n_devices, tokens

@@ -1,0 +1,315 @@
+"""GQA attention: masked, blockwise (flash-style scan), decode-with-cache,
+sliding windows and cross-attention.
+
+Three execution paths, all numerically interchangeable (tested against each
+other and against :func:`repro.kernels.ref.flash_attention_ref`):
+
+* ``_attend_masked`` — materializes (Bq, Bkv) score tiles; used for short
+  sequences (S < cfg.blockwise_threshold).
+* ``_attend_blockwise`` — outer ``lax.scan`` over Q blocks, inner
+  ``fori_loop`` over KV blocks with online softmax; activation memory is
+  O(block_q · block_kv) instead of O(S²), which is what lets the 32k-prefill
+  cells fit HBM. Causal + sliding-window block skipping bounds the inner trip
+  count, so HLO FLOPs stay near the useful-work count.
+* decode — one-token query against the KV cache (linear in S).
+
+The KV cache for full-attention layers is (B, S_max, KV, D) sharded via the
+``seq_kv`` logical axis (model axis) when KV heads don't divide the mesh;
+sliding-window layers keep a ring buffer of size ``window``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.runtime.pytree import ParamSpec
+from repro.runtime.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def kv_layout(cfg: ModelConfig, mode: str) -> Tuple:
+    """ONE consistent KV/cache layout per config on the current mesh.
+
+    Preference: shard KV heads over the model axis when divisible (keeps the
+    decode softmax local); otherwise shard the sequence axis. Mixing layouts
+    between the cache (storage) and the in-loop K/V (compute) made GSPMD
+    reshard the ENTIRE cache stack with a per-layer all-to-all (measured:
+    7.5 GB/layer/step on gemma-7b decode) — hence a single source of truth
+    here, used by both the attention constraints and the dry-run cache
+    sharding trees.
+    """
+    from repro.runtime.sharding import active_ctx
+    ctx = active_ctx()
+    kv_ok = False
+    if ctx is not None and ctx.mesh is not None \
+            and "model" in ctx.mesh.shape:
+        kv_ok = cfg.n_kv_heads % ctx.mesh.shape["model"] == 0
+    if kv_ok:
+        return ("batch", None, "kv_heads", None)
+    if mode == "train":
+        return ("batch", None, None, None)
+    return ("batch", "seq_kv", None, None)
+
+
+def attn_specs(cfg: ModelConfig, site_prefix: str = "") -> Dict:
+    E, H, KV, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = cfg.param_dtype
+    return {
+        "wq": ParamSpec((E, H, D), dt, ("embed", "heads", "head_dim"),
+                        init="scaled_normal", fan_in_dim=0),
+        "wk": ParamSpec((E, KV, D), dt, ("embed", "kv_heads", "head_dim"),
+                        init="scaled_normal", fan_in_dim=0),
+        "wv": ParamSpec((E, KV, D), dt, ("embed", "kv_heads", "head_dim"),
+                        init="scaled_normal", fan_in_dim=0),
+        "wo": ParamSpec((H, D, E), dt, ("heads", "head_dim", "embed"),
+                        init="scaled_normal", fan_in_dim=1),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, length: int) -> Dict:
+    KV, D = cfg.n_kv_heads, cfg.head_dim_
+    shape = (batch, length, KV, D)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, cfg.cdtype()),
+        "v": jax.ShapeDtypeStruct(shape, cfg.cdtype()),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int) -> Dict:
+    KV, D = cfg.n_kv_heads, cfg.head_dim_
+    shape = (batch, length, KV, D)
+    return {"k": jnp.zeros(shape, cfg.cdtype()),
+            "v": jnp.zeros(shape, cfg.cdtype())}
+
+
+def _attend_masked(q, k, v, q_pos, k_pos, causal: bool, window: int):
+    """Grouped-query attention without KV expansion.
+
+    q: (B,Sq,KV,G,D); k/v: (B,Skv,KV,D); positions (B,S) int32. The GQA
+    repeat is folded into the einsums so the expanded (B,S,H,D) KV tensor is
+    never materialized (it dominated decode HBM before)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k
+                        ).astype(jnp.float32) * scale
+    mask = jnp.ones((q_pos.shape[0], 1, 1, q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[:, None, None, None, :] \
+            <= q_pos[:, None, None, :, None]
+    if window > 0:
+        mask &= k_pos[:, None, None, None, :] \
+            > q_pos[:, None, None, :, None] - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+
+
+def _attend_blockwise(q, k, v, *, causal: bool, window: int,
+                      block_q: int, block_kv: int,
+                      dynamic_bounds: bool = True):
+    """Flash-style online-softmax GQA attention, O(block²) live memory.
+
+    q: (B,S,KV,G,D); k/v: (B,S,KV,D). Assumes aligned self-attention; S must
+    divide the blocks (configs pad shapes accordingly).
+
+    ``dynamic_bounds=True`` (inference) skips out-of-causal-window KV blocks
+    with a dynamic fori_loop — no wasted FLOPs. Training uses a static-length
+    inner scan with masking instead (reverse-mode differentiable; the ~2x
+    causal overcompute is a known hillclimb lever, see EXPERIMENTS.md §Perf).
+    """
+    B, S, KV, G, D = q.shape
+    nq = S // block_q
+    nkv = S // block_kv
+    scale = D ** -0.5
+    qb = q.reshape(B, nq, block_q, KV, G, D).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, nkv, block_kv, KV, D).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nkv, block_kv, KV, D).transpose(1, 0, 3, 2, 4)
+
+    def q_block(carry, inputs):
+        qi, qblk = inputs                       # (), (B,KV,G,bq,D)
+        q_ids = qi * block_q + jnp.arange(block_q)
+
+        def kv_step(j, state):
+            m, l, acc = state
+            kblk = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+            k_ids = j * block_kv + jnp.arange(block_kv)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qblk, kblk
+                           ).astype(jnp.float32) * scale
+            msk = jnp.ones((block_q, block_kv), bool)
+            if causal:
+                msk &= k_ids[None, :] <= q_ids[:, None]
+            if window > 0:
+                msk &= k_ids[None, :] > q_ids[:, None] - window
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((B, KV, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, block_q, D), jnp.float32)
+        if dynamic_bounds:
+            # causal block skipping: only KV blocks intersecting
+            # [qi*bq - window, (qi+1)*bq) contribute.
+            hi = jnp.where(causal,
+                           (qi * block_q + block_q + block_kv - 1)
+                           // block_kv, nkv)
+            if window > 0:
+                lo = jnp.maximum(0, (qi * block_q - window) // block_kv)
+            else:
+                lo = jnp.zeros((), jnp.int32)
+            m, l, acc = jax.lax.fori_loop(lo, hi, kv_step, (m0, l0, a0))
+        else:
+            def kv_scan(state, j):
+                return kv_step(j, state), None
+            (m, l, acc), _ = jax.lax.scan(kv_scan, (m0, l0, a0),
+                                          jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, (),
+                           (jnp.arange(nq), qb))    # (nq,B,KV,G,bq,D)
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, KV, G, D)
+
+
+def attention(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
+              positions: jnp.ndarray, mode: str,
+              cache: Optional[Dict] = None,
+              cur_pos: Optional[jnp.ndarray] = None,
+              window: int = 0,
+              kv_x: Optional[jnp.ndarray] = None,
+              is_cross: bool = False,
+              causal: bool = True,
+              use_rope: bool = True
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Unified attention entry.
+
+    mode: "train" (no cache), "prefill" (writes cache), "decode" (Sq = 1,
+    reads+writes cache at ``cur_pos``). ``kv_x`` switches to cross-attention
+    (keys/values from the encoder stream; cache holds the projected enc KV).
+    window > 0 = sliding-window; ring-buffer cache of size ``window``.
+    """
+    B, Sq, E = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    groups = H // KV
+    cd = x.dtype
+
+    q = jnp.einsum("bse,ehd->bshd", x, params["wq"].astype(cd))
+    if use_rope:
+        q = cm.rope(q, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", None, "heads", None))
+    q = q.reshape(B, Sq, KV, groups, D)     # grouped-query layout
+
+    cross = is_cross or kv_x is not None
+    if cross and mode == "decode":
+        # cross-attention KV was projected at prefill time and cached
+        k_all, v_all = cache["k"], cache["v"]
+        new_cache = cache
+        k_pos = jnp.broadcast_to(jnp.arange(k_all.shape[1]),
+                                 (B, k_all.shape[1]))
+        att = _attend_masked(q, k_all.astype(cd), v_all.astype(cd),
+                             positions, k_pos, causal=False, window=0)
+        return _proj_out(cfg, params, att), new_cache
+
+    src = kv_x if cross else x
+    k = jnp.einsum("bse,ekd->bskd", src, params["wk"].astype(cd))
+    v = jnp.einsum("bse,ekd->bskd", src, params["wv"].astype(cd))
+    if use_rope and not cross:
+        k = cm.rope(k, positions, cfg.rope_theta)
+    k = constrain(k, kv_layout(cfg, mode))
+    v = constrain(v, kv_layout(cfg, mode))
+
+    if mode == "decode" and not cross:
+        # write this step's KV into the cache (ring buffer if windowed)
+        length = cache["k"].shape[1]
+        slot = (cur_pos % length) if window > 0 else cur_pos
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": k_all, "v": v_all}
+        kpos = jnp.arange(length)[None, :]
+        if window > 0:
+            # ring buffer: entry i holds absolute position p with
+            # p % window == i and p <= cur_pos, p > cur_pos - window
+            base = cur_pos - (cur_pos % length)
+            abs_pos = kpos + base
+            abs_pos = jnp.where(abs_pos > cur_pos, abs_pos - length, abs_pos)
+            valid = abs_pos >= jnp.maximum(0, cur_pos - window + 1)
+        else:
+            abs_pos = kpos
+            valid = kpos <= cur_pos
+        scale = D ** -0.5
+        ka = k_all.astype(cd)
+        va = v_all.astype(cd)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", q, ka
+                            ).astype(jnp.float32) * scale
+        logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        att = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(va.dtype), va)
+        return _proj_out(cfg, params, att), new_cache
+
+    # train / prefill / cross-encode paths operate on full sequences
+    new_cache = None
+    if mode == "prefill":
+        if window > 0 and not cross:
+            ring = cache["k"].shape[1]
+            # keep the last `ring` positions in the ring buffer, aligned so
+            # that slot = pos % ring (matches the decode path)
+            start = Sq - ring
+            kw = jax.lax.dynamic_slice_in_dim(k, start, ring, axis=1)
+            vw = jax.lax.dynamic_slice_in_dim(v, start, ring, axis=1)
+            roll = (-start) % ring
+            kw = jnp.roll(kw, roll, axis=1)
+            vw = jnp.roll(vw, roll, axis=1)
+            new_cache = {"k": kw.astype(cache["k"].dtype),
+                         "v": vw.astype(cache["v"].dtype)}
+        else:
+            new_cache = {"k": k.astype(cache["k"].dtype),
+                         "v": v.astype(cache["v"].dtype)}
+            if cache["k"].shape[1] != k.shape[1]:
+                pad = cache["k"].shape[1] - k.shape[1]
+                new_cache = {
+                    t: jnp.pad(new_cache[t], ((0, 0), (0, pad), (0, 0),
+                                              (0, 0)))
+                    for t in ("k", "v")}
+
+    use_blockwise = (not cross and Sq >= cfg.blockwise_threshold
+                     and Sq % cfg.attn_block_q == 0
+                     and Sq % cfg.attn_block_kv == 0)
+    if use_blockwise:
+        att = _attend_blockwise(q, k, v, causal=causal, window=window,
+                                block_q=cfg.attn_block_q,
+                                block_kv=cfg.attn_block_kv,
+                                dynamic_bounds=(mode != "train"))
+    else:
+        kpos = (positions if not cross
+                else jnp.broadcast_to(jnp.arange(k.shape[1]),
+                                      (B, k.shape[1])))
+        att = _attend_masked(q, k, v, positions, kpos,
+                             causal=causal and not cross, window=window)
+    return _proj_out(cfg, params, att), new_cache
+
+
+def _proj_out(cfg: ModelConfig, params: Dict, att: jnp.ndarray
+              ) -> jnp.ndarray:
+    """att: (B,S,KV,G,D) grouped layout -> output projection."""
+    B, S = att.shape[:2]
+    H = cfg.n_heads
+    D = cfg.head_dim_
+    att = att.reshape(B, S, H, D)
+    att = constrain(att, ("batch", None, "heads", None))
+    out = jnp.einsum("bshd,hde->bse", att, params["wo"].astype(att.dtype))
+    return out

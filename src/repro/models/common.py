@@ -1,0 +1,179 @@
+"""Shared model components: norms, RoPE, embeddings, projections, losses.
+
+``linear_specs``/``linear_apply`` are the single projection entry point: a
+site can be a plain dense matmul or — when the site is listed in the model's
+:class:`ButterflyConfig` — the paper's butterfly sandwich (§3.2). The static
+:class:`repro.core.layers.ButterflySpec` for a site is derived
+deterministically from (seed, site name, dims) so trace-time code can rebuild
+it without storing non-array state in the param tree.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import zlib
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import butterfly as bfly
+from repro.core import layers as blayers
+from repro.runtime.pytree import ParamSpec
+from repro.runtime.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Projections (dense or butterfly sandwich)
+# ---------------------------------------------------------------------------
+
+def _butterfly_site(cfg: ModelConfig, site: Optional[str]) -> bool:
+    return (cfg.butterfly is not None and site is not None
+            and site in cfg.butterfly.sites)
+
+
+@functools.lru_cache(maxsize=None)
+def site_butterfly_spec(seed: int, site_key: str, n_in: int, n_out: int,
+                        k_factor: float, use_bias: bool
+                        ) -> blayers.ButterflySpec:
+    h = zlib.crc32(site_key.encode()) ^ (seed * 2654435761 & 0x7FFFFFFF)
+    key = jax.random.PRNGKey(h & 0x7FFFFFFF)
+    return blayers.make_spec(key, n_in, n_out, k_factor=k_factor,
+                             use_bias=use_bias)
+
+
+def linear_specs(cfg: ModelConfig, n_in: int, n_out: int,
+                 axes: Tuple[Optional[str], Optional[str]],
+                 site: Optional[str] = None, site_key: str = "",
+                 scale: float = 1.0) -> Dict[str, ParamSpec]:
+    """ParamSpecs for one projection site (dense or butterfly sandwich)."""
+    dt = cfg.param_dtype
+    if _butterfly_site(cfg, site):
+        bc = cfg.butterfly
+        spec = site_butterfly_spec(bc.seed, site_key or site, n_in, n_out,
+                                   bc.k_factor, bc.use_bias)
+        p1 = bfly.num_stages(spec.pad_in)
+        p2 = bfly.num_stages(spec.pad_out)
+        out = {
+            "b_in": ParamSpec((p1, 2, spec.pad_in), dt,
+                              ("stages", None, "butterfly_n"), init="fjlt"),
+            "b_out": ParamSpec((p2, 2, spec.pad_out), dt,
+                               ("stages", None, "butterfly_n"), init="fjlt"),
+            "core": ParamSpec((spec.k_out, spec.k_in), dt, (None, None),
+                              init="scaled_normal", scale=scale),
+        }
+        if bc.use_bias:
+            out["bias"] = ParamSpec((n_out,), dt, (None,), init="zeros")
+        return out
+    return {"w": ParamSpec((n_in, n_out), dt, axes, init="scaled_normal",
+                           scale=scale, fan_in_dim=0)}
+
+
+def linear_apply(cfg: ModelConfig, params: Dict, x: jnp.ndarray,
+                 site: Optional[str] = None, site_key: str = "",
+                 n_out: Optional[int] = None) -> jnp.ndarray:
+    if "w" in params:
+        return x @ params["w"].astype(x.dtype)
+    n_in = x.shape[-1]
+    bc = cfg.butterfly
+    spec = site_butterfly_spec(bc.seed, site_key or site, n_in,
+                               int(n_out), bc.k_factor, bc.use_bias)
+    return blayers.butterfly_linear_apply(spec, params, x)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(cfg: ModelConfig, dim: int) -> ParamSpec:
+    return ParamSpec((dim,), cfg.param_dtype, (None,), init="ones")
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def act_fn(name: str):
+    return {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu,
+            "gelu_mlp": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+         ) -> jnp.ndarray:
+    """x: (B, S, H, D) with D even; positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    return {"table": ParamSpec((cfg.vocab_size, cfg.d_model),
+                               cfg.param_dtype, ("vocab", "embed"),
+                               init="embedding",
+                               scale=1.0 / math.sqrt(cfg.d_model))}
+
+
+def embed(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    # cast the table BEFORE the gather: gathering fp32 then casting
+    # materializes a full-batch fp32 (B,S,E) tensor (2x HBM at 262k vocab)
+    table = params["table"].astype(cfg.cdtype())
+    x = jnp.take(table, tokens, axis=0)
+    return x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype())
+
+
+def head_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    if cfg.tie_embeddings:
+        return {}
+    return linear_specs(cfg, cfg.d_model, cfg.vocab_size,
+                        ("embed", "vocab"), site="lm_head")
+
+
+def head_apply(cfg: ModelConfig, head_params: Dict, embed_params: Dict,
+               x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = x @ embed_params["table"].T.astype(x.dtype)
+    else:
+        logits = linear_apply(cfg, head_params, x, site="lm_head",
+                              n_out=cfg.vocab_size)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean CE over valid positions; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

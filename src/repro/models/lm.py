@@ -1,0 +1,444 @@
+"""Model assembly: pattern-scanned decoder stacks covering all 10 assigned
+architectures (dense / MoE / hybrid / SSM / VLM / enc-dec audio).
+
+The layer stack is described by ``cfg.block_unit`` — a repeating unit of
+block types — so heterogeneous archs compile as ONE ``lax.scan`` over unit
+repeats (plus an unrolled tail of ``n_layers % len(unit)`` layers):
+
+  * smollm/gemma/mistral:  unit ("attn",)
+  * gemma3-27b:            unit ("local",)*5 + ("global",)  (5:1, window 1024)
+  * olmoe/dbrx:            unit ("moe",)
+  * recurrentgemma-2b:     unit ("rec", "rec", "attn")      (2 RG-LRU : 1 attn)
+  * xlstm-125m:            unit ("mlstm",)*5 + ("slstm",)
+  * internvl2-1b:          unit ("attn",) + vision-frontend prefix tokens
+  * seamless-m4t:          encoder unit ("enc",) + decoder unit ("xdec",)
+
+Scanning keeps HLO size O(#block types) instead of O(n_layers) — this is
+what makes the 62-layer/88-layer 512-device dry-runs compile in seconds —
+and composes with per-unit-position KV/state cache stacks of *different*
+shapes (local layers keep a ring buffer of window size; global layers keep
+full-length caches), which is what bounds the 500k-context cell's memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import mlp as mlpm
+from repro.models import moe as moem
+from repro.models import rglru as rgm
+from repro.models import xlstm as xm
+from repro.runtime.pytree import ParamSpec
+from repro.runtime.sharding import constrain
+
+ATTN_TYPES = ("attn", "local", "global", "moe", "xdec", "enc")
+
+
+# ---------------------------------------------------------------------------
+# Per-block-type specs / caches / apply
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg: ModelConfig, btype: str) -> Dict:
+    E = cfg.d_model
+    out: Dict[str, Any] = {"norm1": cm.rmsnorm_spec(cfg, E)}
+    if btype in ("attn", "local", "global", "moe", "enc"):
+        out["attn"] = attn.attn_specs(cfg)
+        out["norm2"] = cm.rmsnorm_spec(cfg, E)
+        out["ffn"] = (moem.moe_specs(cfg) if btype == "moe"
+                      else mlpm.mlp_specs(cfg))
+    elif btype == "rec":
+        out["rec"] = rgm.rglru_specs(cfg)
+        out["norm2"] = cm.rmsnorm_spec(cfg, E)
+        out["ffn"] = mlpm.mlp_specs(cfg)
+    elif btype == "mlstm":
+        out["mlstm"] = xm.mlstm_specs(cfg)
+    elif btype == "slstm":
+        out["slstm"] = xm.slstm_specs(cfg)
+    elif btype == "xdec":
+        out["attn"] = attn.attn_specs(cfg)
+        out["norm_x"] = cm.rmsnorm_spec(cfg, E)
+        out["xattn"] = attn.attn_specs(cfg)
+        out["norm2"] = cm.rmsnorm_spec(cfg, E)
+        out["ffn"] = mlpm.mlp_specs(cfg)
+    else:
+        raise ValueError(f"unknown block type {btype!r}")
+    return out
+
+
+def layer_cache_spec(cfg: ModelConfig, btype: str, batch: int,
+                     seq_len: int) -> Optional[Dict]:
+    if btype in ("attn", "global", "moe"):
+        return {"self": attn.cache_spec(cfg, batch, seq_len)}
+    if btype == "local":
+        length = min(cfg.sliding_window, seq_len)
+        return {"self": attn.cache_spec(cfg, batch, length)}
+    if btype == "rec":
+        return {"rec": rgm.rglru_cache_spec(cfg, batch)}
+    if btype == "mlstm":
+        return {"mlstm": xm.mlstm_cache_spec(cfg, batch)}
+    if btype == "slstm":
+        return {"slstm": xm.slstm_cache_spec(cfg, batch)}
+    if btype == "xdec":
+        return {"self": attn.cache_spec(cfg, batch, seq_len),
+                "cross": attn.cache_spec(cfg, batch, cfg.enc_seq)}
+    if btype == "enc":
+        return None
+    raise ValueError(btype)
+
+
+def init_layer_cache(cfg: ModelConfig, btype: str, batch: int,
+                     seq_len: int) -> Optional[Dict]:
+    spec = layer_cache_spec(cfg, btype, batch, seq_len)
+    if spec is None:
+        return None
+    cache = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                   spec)
+    if btype == "mlstm":
+        cache["mlstm"]["m"] = jnp.full(spec["mlstm"]["m"].shape, -1e30,
+                                       jnp.float32)
+    if btype == "slstm":
+        cache["slstm"]["m"] = jnp.full(spec["slstm"]["m"].shape, -1e30,
+                                       jnp.float32)
+        cache["slstm"]["n"] = jnp.full(spec["slstm"]["n"].shape, 1e-6,
+                                       jnp.float32)
+    return cache
+
+
+def layer_apply(cfg: ModelConfig, btype: str, params: Dict, x: jnp.ndarray,
+                *, positions: jnp.ndarray, mode: str,
+                cache: Optional[Dict], cur_pos,
+                enc_out: Optional[jnp.ndarray]
+                ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[Dict] = {} if cache is not None else None
+    sp = functools.partial(constrain,
+                           axes=("batch", "seq_sp" if
+                                 cfg.seq_shard_activations else None, None))
+
+    def res_add(x, delta):
+        return sp(x + delta)
+
+    if btype in ("attn", "local", "global", "moe", "enc"):
+        window = cfg.sliding_window if btype == "local" else 0
+        h = cm.rmsnorm(x, params["norm1"], cfg.norm_eps)
+        a, c_new = attn.attention(
+            cfg, params["attn"], h, positions=positions, mode=mode,
+            cache=None if cache is None else cache.get("self"),
+            cur_pos=cur_pos, window=window, causal=(btype != "enc"))
+        x = res_add(x, a)
+        if new_cache is not None and c_new is not None:
+            new_cache["self"] = c_new
+        h = cm.rmsnorm(x, params["norm2"], cfg.norm_eps)
+        if btype == "moe":
+            f, aux = moem.moe_apply(cfg, params["ffn"], h)
+        else:
+            f = mlpm.mlp_apply(cfg, params["ffn"], h)
+        x = res_add(x, f)
+    elif btype == "rec":
+        h = cm.rmsnorm(x, params["norm1"], cfg.norm_eps)
+        r, c_new = rgm.rglru_block(
+            cfg, params["rec"], h, mode=mode,
+            cache=None if cache is None else cache.get("rec"))
+        x = res_add(x, r)
+        if new_cache is not None and c_new is not None:
+            new_cache["rec"] = c_new
+        h = cm.rmsnorm(x, params["norm2"], cfg.norm_eps)
+        x = res_add(x, mlpm.mlp_apply(cfg, params["ffn"], h))
+    elif btype == "mlstm":
+        h = cm.rmsnorm(x, params["norm1"], cfg.norm_eps)
+        r, c_new = xm.mlstm_block(
+            cfg, params["mlstm"], h, mode=mode,
+            cache=None if cache is None else cache.get("mlstm"))
+        x = res_add(x, r)
+        if new_cache is not None and c_new is not None:
+            new_cache["mlstm"] = c_new
+    elif btype == "slstm":
+        h = cm.rmsnorm(x, params["norm1"], cfg.norm_eps)
+        r, c_new = xm.slstm_block(
+            cfg, params["slstm"], h, mode=mode,
+            cache=None if cache is None else cache.get("slstm"))
+        x = res_add(x, r)
+        if new_cache is not None and c_new is not None:
+            new_cache["slstm"] = c_new
+    elif btype == "xdec":
+        h = cm.rmsnorm(x, params["norm1"], cfg.norm_eps)
+        a, c_new = attn.attention(
+            cfg, params["attn"], h, positions=positions, mode=mode,
+            cache=None if cache is None else cache.get("self"),
+            cur_pos=cur_pos, window=0)
+        x = res_add(x, a)
+        if new_cache is not None and c_new is not None:
+            new_cache["self"] = c_new
+        h = cm.rmsnorm(x, params["norm_x"], cfg.norm_eps)
+        a, c_new = attn.attention(
+            cfg, params["xattn"], h, positions=positions, mode=mode,
+            cache=None if cache is None else cache.get("cross"),
+            cur_pos=cur_pos, kv_x=enc_out, is_cross=True, causal=False,
+            use_rope=False)
+        x = res_add(x, a)
+        if new_cache is not None and c_new is not None:
+            new_cache["cross"] = c_new
+        h = cm.rmsnorm(x, params["norm2"], cfg.norm_eps)
+        x = res_add(x, mlpm.mlp_apply(cfg, params["ffn"], h))
+    else:
+        raise ValueError(btype)
+    if new_cache is not None and not new_cache:
+        new_cache = None
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacked (scanned) pattern
+# ---------------------------------------------------------------------------
+
+def _stack_specs(specs: Dict, repeats: int) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((repeats,) + s.shape, s.dtype,
+                            (None,) + tuple(s.axes or (None,) * len(s.shape)),
+                            init=s.init, scale=s.scale,
+                            fan_in_dim=(s.fan_in_dim if s.fan_in_dim < 0
+                                        else s.fan_in_dim + 1)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def model_specs(cfg: ModelConfig) -> Dict:
+    unit = cfg.block_unit
+    R = cfg.unit_repeats
+    out: Dict[str, Any] = {"embed": cm.embed_specs(cfg)}
+    if cfg.frontend:
+        out["frontend_proj"] = ParamSpec(
+            (cfg.d_model, cfg.d_model), cfg.param_dtype, ("embed", None),
+            init="scaled_normal", fan_in_dim=0)
+    if cfg.n_enc_layers:
+        out["enc_unit"] = [_stack_specs(layer_specs(cfg, "enc"),
+                                        cfg.n_enc_layers)]
+        out["enc_norm"] = cm.rmsnorm_spec(cfg, cfg.d_model)
+    out["unit"] = [_stack_specs(layer_specs(cfg, t), R) for t in unit]
+    out["tail"] = [layer_specs(cfg, t) for t in cfg.tail_layers]
+    out["final_norm"] = cm.rmsnorm_spec(cfg, cfg.d_model)
+    out["head"] = cm.head_specs(cfg)
+    return out
+
+
+def total_seq(cfg: ModelConfig, seq_len: int) -> int:
+    """Cache length: text tokens plus any prepended frontend tokens."""
+    return seq_len + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+    unit = cfg.block_unit
+    R = cfg.unit_repeats
+    seq_len = total_seq(cfg, seq_len)
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((R,) + s.shape, s.dtype), tree)
+
+    return {
+        "unit": [stack(layer_cache_spec(cfg, t, batch, seq_len))
+                 for t in unit],
+        "tail": [layer_cache_spec(cfg, t, batch, seq_len)
+                 for t in cfg.tail_layers],
+    }
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+    unit = cfg.block_unit
+    R = cfg.unit_repeats
+    seq_len = total_seq(cfg, seq_len)
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (R,) + a.shape).copy(), tree)
+
+    return {
+        "unit": [stack(init_layer_cache(cfg, t, batch, seq_len))
+                 for t in unit],
+        "tail": [init_layer_cache(cfg, t, batch, seq_len)
+                 for t in cfg.tail_layers],
+    }
+
+
+def backbone(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
+             positions: jnp.ndarray, mode: str,
+             caches: Optional[Dict] = None, cur_pos=None,
+             enc_out: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Run the full layer stack. Returns (x, new_caches, aux)."""
+    unit = cfg.block_unit
+    R = cfg.unit_repeats
+    aux0 = jnp.zeros((), jnp.float32)
+    with_cache = caches is not None
+
+    def body(carry, xs):
+        """Caches ride the scan CARRY with in-place slice updates: emitting
+        them as ys would double-buffer the full KV stack (measured: +6 GB on
+        mistral decode_32k); XLA aliases in-place carry updates instead."""
+        if with_cache:
+            x, aux, cache_stacks = carry
+            layer_params, idx = xs
+            layer_caches = [
+                jax.tree_util.tree_map(
+                    lambda c: jax.lax.dynamic_index_in_dim(
+                        c, idx, 0, keepdims=False), cache_stacks[i])
+                for i in range(len(unit))]
+        else:
+            x, aux = carry
+            layer_params = xs
+            layer_caches = [None] * len(unit)
+        new_caches = []
+        for i, t in enumerate(unit):
+            x, nc, a = layer_apply(cfg, t, layer_params[i], x,
+                                   positions=positions, mode=mode,
+                                   cache=layer_caches[i], cur_pos=cur_pos,
+                                   enc_out=enc_out)
+            new_caches.append(nc if nc is not None else layer_caches[i])
+            aux = aux + a
+        if with_cache:
+            cache_stacks = [
+                jax.tree_util.tree_map(
+                    lambda stack, nc: jax.lax.dynamic_update_index_in_dim(
+                        stack, nc.astype(stack.dtype), idx, 0),
+                    cache_stacks[i], new_caches[i])
+                for i in range(len(unit))]
+            return (x, aux, cache_stacks), None
+        return (x, aux), None
+
+    if R > 0:
+        fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+        if with_cache:
+            xs = (params["unit"], jnp.arange(R))
+            (x, aux, unit_caches), _ = jax.lax.scan(
+                fn, (x, aux0, caches["unit"]), xs)
+        else:
+            (x, aux), _ = jax.lax.scan(fn, (x, aux0), params["unit"])
+            unit_caches = None
+    else:
+        unit_caches = caches["unit"] if with_cache else None
+        aux = aux0
+
+    tail_caches = []
+    for i, t in enumerate(cfg.tail_layers):
+        c = caches["tail"][i] if with_cache else None
+        x, nc, a = layer_apply(cfg, t, params["tail"][i], x,
+                               positions=positions, mode=mode, cache=c,
+                               cur_pos=cur_pos, enc_out=enc_out)
+        tail_caches.append(nc if nc is not None else c)
+        aux = aux + a
+
+    new_caches = ({"unit": unit_caches, "tail": tail_caches}
+                  if with_cache else None)
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec archs) and input embedding incl. frontend stubs
+# ---------------------------------------------------------------------------
+
+def run_encoder(cfg: ModelConfig, params: Dict, frames: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Bidirectional encoder over precomputed frame embeddings (stub
+    frontend): frames (B, S_enc, E)."""
+    x = frames.astype(cfg.cdtype())
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(carry, layer_params):
+        x, = carry
+        x, _, _ = layer_apply(cfg, "enc", layer_params, x,
+                              positions=positions, mode="train", cache=None,
+                              cur_pos=None, enc_out=None)
+        return (x,), None
+
+    (x,), _ = jax.lax.scan(body, (x,), params["enc_unit"][0])
+    return cm.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def embed_inputs(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                 frontend_embeds: Optional[jnp.ndarray] = None
+                 ) -> jnp.ndarray:
+    """Token embedding; VLM archs prepend projected patch embeddings."""
+    x = cm.embed(cfg, params["embed"], tokens)
+    if cfg.frontend == "vision" and frontend_embeds is not None:
+        fe = frontend_embeds.astype(x.dtype) @ \
+            params["frontend_proj"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Top-level model entry points
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Training loss (mean CE over text positions) + metrics."""
+    tokens = batch["tokens"]
+    x = embed_inputs(cfg, params, tokens, batch.get("frontend_embeds"))
+    x = constrain(x, ("batch", None, None))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = run_encoder(cfg, params, batch["frames"])
+
+    x, _, aux = backbone(cfg, params, x, positions=positions, mode="train",
+                         enc_out=enc_out)
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.head_apply(cfg, params["head"], params["embed"], x)
+    logits = constrain(logits, ("batch", None, "vocab"))
+
+    n_front = (batch["frontend_embeds"].shape[1]
+               if (cfg.frontend == "vision"
+                   and batch.get("frontend_embeds") is not None) else 0)
+    if n_front:
+        logits = logits[:, n_front:]
+    # next-token prediction
+    targets = batch["targets"]
+    mask = batch.get("mask")
+    ce = cm.cross_entropy(logits[:, :-1], targets[:, 1:],
+                          None if mask is None else mask[:, 1:])
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict, caches: Dict
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Process the full prompt, fill caches, return last-position logits."""
+    tokens = batch["tokens"]
+    x = embed_inputs(cfg, params, tokens, batch.get("frontend_embeds"))
+    x = constrain(x, ("batch", None, None))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = run_encoder(cfg, params, batch["frames"])
+    x, caches, _ = backbone(cfg, params, x, positions=positions,
+                            mode="prefill", caches=caches, enc_out=enc_out)
+    x = cm.rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = cm.head_apply(cfg, params["head"], params["embed"], x)
+    return logits[:, 0], caches
+
+
+def decode_step(cfg: ModelConfig, params: Dict, token: jnp.ndarray,
+                caches: Dict, cur_pos: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step: token (B,) int32 at absolute position cur_pos."""
+    x = cm.embed(cfg, params["embed"], token[:, None])
+    B = x.shape[0]
+    positions = jnp.broadcast_to(cur_pos[None, None], (B, 1)
+                                 ).astype(jnp.int32)
+    x, caches, _ = backbone(cfg, params, x, positions=positions,
+                            mode="decode", caches=caches, cur_pos=cur_pos)
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.head_apply(cfg, params["head"], params["embed"], x)
+    return logits[:, 0], caches

@@ -1,0 +1,43 @@
+"""Gated MLP blocks (SwiGLU / GeGLU / plain GELU), butterfly-replaceable."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.runtime.sharding import constrain
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int = 0) -> Dict:
+    E = cfg.d_model
+    F = d_ff or cfg.d_ff
+    out = {
+        "up": cm.linear_specs(cfg, E, F, ("embed", "mlp"), site="mlp",
+                              site_key="mlp_up"),
+        "down": cm.linear_specs(cfg, F, E, ("mlp", "embed"), site="mlp",
+                                site_key="mlp_down"),
+    }
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        out["gate"] = cm.linear_specs(cfg, E, F, ("embed", "mlp"),
+                                      site="mlp", site_key="mlp_gate")
+    return out
+
+
+def mlp_apply(cfg: ModelConfig, params: Dict, x: jnp.ndarray,
+              d_ff: int = 0) -> jnp.ndarray:
+    F = d_ff or cfg.d_ff
+    act = cm.act_fn(cfg.mlp_variant)
+    up = cm.linear_apply(cfg, params["up"], x, site="mlp",
+                         site_key="mlp_up", n_out=F)
+    if "gate" in params:
+        gate = cm.linear_apply(cfg, params["gate"], x, site="mlp",
+                               site_key="mlp_gate", n_out=F)
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = constrain(h, ("batch", None, "mlp"))
+    return cm.linear_apply(cfg, params["down"], h, site="mlp",
+                           site_key="mlp_down", n_out=cfg.d_model)

@@ -1,0 +1,156 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: x → [gate branch: linear+GeLU] ⊙ [rec branch: linear → causal
+depthwise conv(w=4) → RG-LRU] → output linear.
+
+RG-LRU (real-gated linear recurrent unit)::
+
+    r_t = σ(W_a x_t + b_a)              recurrence gate
+    i_t = σ(W_x x_t + b_x)              input gate
+    a_t = exp(-c · softplus(Λ) ⊙ r_t)   diagonal decay, c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence is *diagonal*, so train/prefill run in O(S log S) via
+``jax.lax.associative_scan`` (sub-quadratic — this is why the arch runs the
+500k-context cell), and decode is an O(1) state update. The paper's butterfly
+technique does not apply to the diagonal recurrence itself (nothing dense to
+replace); it applies to the in/out projections (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.runtime.pytree import ParamSpec
+from repro.runtime.sharding import constrain
+
+_C = 8.0
+
+
+def rglru_specs(cfg: ModelConfig) -> Dict:
+    E, R, W = cfg.d_model, cfg.lru_width_, cfg.conv_width
+    dt = cfg.param_dtype
+    return {
+        "w_in": ParamSpec((E, R), dt, ("embed", "rnn_state"),
+                          init="scaled_normal", fan_in_dim=0),
+        "w_gate_branch": ParamSpec((E, R), dt, ("embed", "rnn_state"),
+                                   init="scaled_normal", fan_in_dim=0),
+        "conv": ParamSpec((W, R), dt, (None, "rnn_state"),
+                          init="scaled_normal", scale=0.5, fan_in_dim=0),
+        "w_a": ParamSpec((R, R), dt, ("rnn_state", None),
+                         init="scaled_normal", fan_in_dim=0),
+        "b_a": ParamSpec((R,), dt, (None,), init="zeros"),
+        "w_x": ParamSpec((R, R), dt, ("rnn_state", None),
+                         init="scaled_normal", fan_in_dim=0),
+        "b_x": ParamSpec((R,), dt, (None,), init="zeros"),
+        "lam": ParamSpec((R,), dt, (None,), init="normal", scale=0.5),
+        "w_out": ParamSpec((R, E), dt, ("rnn_state", "embed"),
+                           init="scaled_normal", fan_in_dim=0),
+    }
+
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int) -> Dict:
+    R, W = cfg.lru_width_, cfg.conv_width
+    f32 = jnp.float32
+    return {
+        "h": jax.ShapeDtypeStruct((batch, R), f32),
+        "conv": jax.ShapeDtypeStruct((batch, W - 1, R), cfg.cdtype()),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> Dict:
+    R, W = cfg.lru_width_, cfg.conv_width
+    return {"h": jnp.zeros((batch, R), jnp.float32),
+            "conv": jnp.zeros((batch, W - 1, R), cfg.cdtype())}
+
+
+def _causal_conv(x: jnp.ndarray, kernel: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv over time. x: (B,S,R); kernel: (W,R);
+    history: (B,W-1,R) previous inputs (decode/chunked prefill)."""
+    W = kernel.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    S = x.shape[1]
+    for j in range(W):
+        out = out + kernel[j].astype(x.dtype) * jax.lax.dynamic_slice_in_dim(
+            xp, j, S, axis=1)
+    return out
+
+
+def _gates(params: Dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    cd = x.dtype
+    r = jax.nn.sigmoid((x @ params["w_a"].astype(cd)
+                        + params["b_a"].astype(cd)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["w_x"].astype(cd)
+                        + params["b_x"].astype(cd)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) \
+        * (i * x.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_scan(params: Dict, x: jnp.ndarray,
+               h0: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray,
+                                                          jnp.ndarray]:
+    """Parallel linear recurrence over (B,S,R). Returns (hs, h_last)."""
+    a, b = _gates(params, x)                       # (B,S,R) f32 each
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        hs = A * h0[:, None, :] + Bc
+    else:
+        hs = Bc
+    return hs, hs[:, -1, :]
+
+
+def rglru_step(params: Dict, x: jnp.ndarray, h: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. x: (B,1,R); h: (B,R) f32."""
+    a, b = _gates(params, x)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new[:, None, :], h_new
+
+
+def rglru_block(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
+                mode: str, cache: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full Griffin recurrent block. x: (B,S,E)."""
+    cd = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate_branch"].astype(cd))
+    u = x @ params["w_in"].astype(cd)
+    u = constrain(u, ("batch", None, "rnn_state"))
+
+    new_cache = None
+    if mode == "decode":
+        conv_hist = cache["conv"]
+        v = _causal_conv(u, params["conv"], conv_hist)
+        hs, h_last = rglru_step(params, v, cache["h"])
+        W = cfg.conv_width
+        new_hist = jnp.concatenate([conv_hist[:, 1:], u.astype(conv_hist.dtype)],
+                                   axis=1) if W > 1 else conv_hist
+        new_cache = {"h": h_last, "conv": new_hist}
+    else:
+        v = _causal_conv(u, params["conv"])
+        hs, h_last = rglru_scan(params, v)
+        if mode == "prefill":
+            W = cfg.conv_width
+            hist = u[:, -(W - 1):, :] if W > 1 else u[:, :0, :]
+            new_cache = {"h": h_last,
+                         "conv": hist.astype(cache["conv"].dtype)}
+    out = (hs.astype(cd) * gate) @ params["w_out"].astype(cd)
+    return out, new_cache

@@ -1,0 +1,395 @@
+"""xLSTM blocks: chunkwise mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM recurrence (stabilized, per head)::
+
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)                    stabilizer
+    f'_t = exp(f̃_t + m_{t-1} - m_t),  i'_t = exp(ĩ_t - m_t)
+    C_t = f'_t C_{t-1} + i'_t v_t k_tᵀ               (dv × dk) matrix memory
+    n_t = f'_t n_{t-1} + i'_t k_t
+    h_t = C_t q_t / max(|n_tᵀ q_t|, exp(-m_t))       (q pre-scaled 1/√dk)
+
+Three equivalent execution paths (cross-validated in tests):
+  * ``mlstm_recurrent`` — lax.scan over time (decode oracle; O(1) state)
+  * ``mlstm_parallel``  — quadratic masked form (short sequences)
+  * ``mlstm_chunkwise`` — scan over chunks carrying (C, n, m); within-chunk
+    parallel. O(S·c) time / O(c²) live memory → the 32k/500k cells stay
+    sub-quadratic. This is the TPU-native adaptation: chunk size is picked so
+    the (c × c) decay matrix and (dk × dv) state tiles fit VMEM-sized blocks.
+
+sLSTM keeps per-head scalar state with exponential gating and a *recurrent*
+dependence on h_{t-1} (block-diagonal R per head) — inherently sequential,
+implemented with lax.scan; decode is a single fused step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.runtime.pytree import ParamSpec
+from repro.runtime.sharding import constrain
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(d_inner, heads, head_dim) for the mLSTM block (pf = 2)."""
+    d_inner = 2 * cfg.d_model
+    H = cfg.n_heads
+    return d_inner, H, d_inner // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core math
+# ---------------------------------------------------------------------------
+
+def mlstm_recurrent(q, k, v, igate, fgate, state=None):
+    """q/k/v: (B,S,H,D); igate/fgate preacts: (B,S,H). Returns (h, state).
+
+    state = (C (B,H,D,D), n (B,H,D), m (B,H)); fgate preact goes through
+    log-sigmoid (xLSTM's stabilized exponential forget gate).
+    """
+    B, S, H, D = q.shape
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fgate.astype(jnp.float32))
+    ig = igate.astype(jnp.float32)
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt, ft, it = (qf[:, t], kf[:, t], vf[:, t],
+                              logf[:, t], ig[:, t])
+        m_new = jnp.maximum(ft + m, it)
+        fp = jnp.exp(ft + m - m_new)
+        ip = jnp.exp(it - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] \
+            * vt[..., :, None] * kt[..., None, :]
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), jnp.arange(S))
+    hs = hs.transpose(1, 0, 2, 3)                     # (B,S,H,D)
+    return hs, (C, n, m)
+
+
+def mlstm_parallel(q, k, v, igate, fgate):
+    """Quadratic masked form (oracle / short sequences)."""
+    B, S, H, D = q.shape
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fgate.astype(jnp.float32))   # (B,S,H)
+    ig = igate.astype(jnp.float32)
+    F = jnp.cumsum(logf, axis=1)                            # (B,S,H)
+    # log decay matrix: logD[i,j] = F_i - F_j + ig_j  (j <= i)
+    logD = (F[:, :, None, :] - F[:, None, :, :]
+            + ig[:, None, :, :])                            # (B,Sq,Sk,H)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logD = jnp.where(mask[None, :, :, None], logD, -jnp.inf)
+    m = jnp.max(logD, axis=2)                               # (B,S,H)
+    m = jnp.maximum(m, -1e30)                               # rows with no mass
+    Dmat = jnp.exp(logD - m[:, :, None, :])
+    scores = jnp.einsum("bqhd,bkhd->bqkh", qf, kf) * Dmat
+    num = jnp.einsum("bqkh,bkhd->bqhd", scores, vf)
+    den = jnp.maximum(jnp.abs(scores.sum(axis=2)), jnp.exp(-m))
+    return num / den[..., None]
+
+
+def mlstm_chunkwise(q, k, v, igate, fgate, chunk: int, state=None,
+                    return_state: bool = False):
+    """Chunked scan: parallel within chunks, recurrent across chunks."""
+    B, S, H, D = q.shape
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+    qf = (q.astype(jnp.float32) * (D ** -0.5)).reshape(B, nc, c, H, D)
+    kf = k.astype(jnp.float32).reshape(B, nc, c, H, D)
+    vf = v.astype(jnp.float32).reshape(B, nc, c, H, D)
+    logf = jax.nn.log_sigmoid(fgate.astype(jnp.float32)).reshape(B, nc, c, H)
+    ig = igate.astype(jnp.float32).reshape(B, nc, c, H)
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    mask = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, fc, ic = xs          # (B,c,H,D) / (B,c,H)
+        b = jnp.cumsum(fc, axis=1)                       # (B,c,H) incl.
+        # intra-chunk log decays
+        logD = (b[:, :, None, :] - b[:, None, :, :]
+                + ic[:, None, :, :])                     # (B,ci,cj,H)
+        logD = jnp.where(mask[None, :, :, None], logD, -jnp.inf)
+        m_intra = jnp.max(logD, axis=2)                  # (B,c,H)
+        # inter-chunk: state decayed by b_i, at stabilizer m (state scale)
+        m_inter = b + m[:, None, :]                      # (B,c,H)
+        m_i = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+        Dm = jnp.exp(logD - m_i[:, :, None, :])
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qc, kc) * Dm
+        num = jnp.einsum("bqkh,bkhd->bqhd", scores, vc)
+        den_intra = scores.sum(axis=2)                   # (B,c,H)
+        w_state = jnp.exp(m_inter - m_i)                 # (B,c,H)
+        num = num + w_state[..., None] * jnp.einsum(
+            "bhvk,bqhk->bqhv", C, qc)
+        den = den_intra + w_state * jnp.einsum("bhk,bqhk->bqh", n, qc)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+        h = num / den[..., None]
+        # ---- state update to end of chunk ----
+        b_tot = b[:, -1, :]                              # (B,H)
+        g = b_tot[:, None, :] - b + ic                   # decay token->end
+        m_next = jnp.maximum(b_tot + m, jnp.max(g, axis=1))
+        w_old = jnp.exp(b_tot + m - m_next)              # (B,H)
+        w_new = jnp.exp(g - m_next[:, None, :])          # (B,c,H)
+        C = w_old[..., None, None] * C + jnp.einsum(
+            "bchv,bchk,bch->bhvk", vc, kc, w_new)
+        n = w_old[..., None] * n + jnp.einsum("bchk,bch->bhk", kc, w_new)
+        return (C, n, m_next), h
+
+    xs = (qf.transpose(1, 0, 2, 3, 4), kf.transpose(1, 0, 2, 3, 4),
+          vf.transpose(1, 0, 2, 3, 4), logf.transpose(1, 0, 2, 3),
+          ig.transpose(1, 0, 2, 3))
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+    if return_state:
+        return hs, (C, n, m)
+    return hs
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (up-proj, conv, qkv, gates, headnorm, gated down-proj)
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig) -> Dict:
+    E = cfg.d_model
+    DI, H, D = _dims(cfg)
+    dt = cfg.param_dtype
+    W = cfg.conv_width
+    return {
+        "w_up": ParamSpec((E, 2 * DI), dt, ("embed", "mlp"),
+                          init="scaled_normal", fan_in_dim=0),
+        "conv": ParamSpec((W, DI), dt, (None, "mlp"),
+                          init="scaled_normal", scale=0.5, fan_in_dim=0),
+        "wq": ParamSpec((DI, DI), dt, ("mlp", None),
+                        init="scaled_normal", fan_in_dim=0),
+        "wk": ParamSpec((DI, DI), dt, ("mlp", None),
+                        init="scaled_normal", fan_in_dim=0),
+        "wv": ParamSpec((DI, DI), dt, ("mlp", None),
+                        init="scaled_normal", fan_in_dim=0),
+        "w_igate": ParamSpec((DI, H), dt, ("mlp", None),
+                             init="scaled_normal", scale=0.1, fan_in_dim=0),
+        "b_igate": ParamSpec((H,), dt, (None,), init="zeros"),
+        "w_fgate": ParamSpec((DI, H), dt, ("mlp", None),
+                             init="scaled_normal", scale=0.1, fan_in_dim=0),
+        "b_fgate": ParamSpec((H,), dt, (None,), init="ones"),
+        "headnorm": ParamSpec((DI,), dt, (None,), init="ones"),
+        "w_down": ParamSpec((DI, E), dt, ("mlp", "embed"),
+                            init="scaled_normal", fan_in_dim=0),
+    }
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int) -> Dict:
+    DI, H, D = _dims(cfg)
+    f32 = jnp.float32
+    return {
+        "C": jax.ShapeDtypeStruct((batch, H, D, D), f32),
+        "n": jax.ShapeDtypeStruct((batch, H, D), f32),
+        "m": jax.ShapeDtypeStruct((batch, H), f32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, DI),
+                                     cfg.cdtype()),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    specs = mlstm_cache_spec(cfg, batch)
+    cache = {k: jnp.zeros(s.shape, s.dtype) for k, s in specs.items()}
+    cache["m"] = jnp.full(specs["m"].shape, -1e30, jnp.float32)
+    return cache
+
+
+def mlstm_block(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
+                mode: str, cache: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    from repro.models.rglru import _causal_conv
+    B, S, E = x.shape
+    DI, H, D = _dims(cfg)
+    cd = x.dtype
+    up = x @ params["w_up"].astype(cd)                    # (B,S,2DI)
+    u, z = jnp.split(up, 2, axis=-1)
+    u = constrain(u, ("batch", None, "mlp"))
+
+    hist = cache["conv"] if (cache is not None and mode == "decode") else None
+    uc = jax.nn.silu(_causal_conv(u, params["conv"], hist))
+    q = (uc @ params["wq"].astype(cd)).reshape(B, S, H, D)
+    k = (uc @ params["wk"].astype(cd)).reshape(B, S, H, D)
+    v = (u @ params["wv"].astype(cd)).reshape(B, S, H, D)
+    ig = uc @ params["w_igate"].astype(cd) + params["b_igate"].astype(cd)
+    fg = uc @ params["w_fgate"].astype(cd) + params["b_fgate"].astype(cd)
+
+    new_cache = None
+    if mode == "decode":
+        state = (cache["C"], cache["n"], cache["m"])
+        hs, (C, n, m) = mlstm_recurrent(q, k, v, ig, fg, state)
+        W = cfg.conv_width
+        hist_new = (jnp.concatenate([cache["conv"][:, 1:],
+                                     u.astype(cache["conv"].dtype)], axis=1)
+                    if W > 1 else cache["conv"])
+        new_cache = {"C": C, "n": n, "m": m, "conv": hist_new}
+    else:
+        c = cfg.mlstm_chunk
+        pad = (-S) % c
+        if pad and S > c:
+            # pad to a chunk multiple with state-neutral steps:
+            # i' = exp(-1e9) = 0 (no write), log f = log_sigmoid(1e9) = 0
+            # (no decay) — outputs of pad steps are sliced off below.
+            zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) +
+                                     ((0, 0),) * (a.ndim - 2))
+            q, k, v = zpad(q), zpad(k), zpad(v)
+            ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=-1e9)
+            fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=1e9)
+        if S <= c:
+            hs = mlstm_parallel(q, k, v, ig, fg)
+            st = None
+        else:
+            res = mlstm_chunkwise(q, k, v, ig, fg, c,
+                                  return_state=(mode == "prefill"))
+            if mode == "prefill":
+                hs, st = res
+            else:
+                hs, st = res, None
+        hs = hs[:, :S]
+        if mode == "prefill":
+            if st is None:
+                hs2, st = mlstm_recurrent(q[:, :S], k[:, :S], v[:, :S],
+                                          ig[:, :S], fg[:, :S])
+                del hs2
+            W = cfg.conv_width
+            hist_new = u[:, -(W - 1):, :] if W > 1 else u[:, :0, :]
+            new_cache = {"C": st[0], "n": st[1], "m": st[2],
+                         "conv": hist_new.astype(cfg.cdtype())}
+
+    h = hs.reshape(B, S, DI).astype(cd)
+    h = cm.rmsnorm(h, params["headnorm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    out = h @ params["w_down"].astype(cd)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> Dict:
+    E = cfg.d_model
+    H = cfg.n_heads
+    D = E // H
+    dt = cfg.param_dtype
+    ffn = _slstm_ffn_dim(cfg)
+    return {
+        "w_zifo": ParamSpec((E, 4 * E), dt, ("embed", "mlp"),
+                            init="scaled_normal", fan_in_dim=0),
+        "r_zifo": ParamSpec((H, D, 4 * D), dt, (None, None, None),
+                            init="scaled_normal", scale=0.5, fan_in_dim=1),
+        "b_zifo": ParamSpec((4 * E,), dt, (None,), init="zeros"),
+        "groupnorm": ParamSpec((E,), dt, (None,), init="ones"),
+        "ffn_gate": ParamSpec((E, ffn), dt, ("embed", "mlp"),
+                              init="scaled_normal", fan_in_dim=0),
+        "ffn_up": ParamSpec((E, ffn), dt, ("embed", "mlp"),
+                            init="scaled_normal", fan_in_dim=0),
+        "ffn_down": ParamSpec((ffn, E), dt, ("mlp", "embed"),
+                              init="scaled_normal", fan_in_dim=0),
+    }
+
+
+def _slstm_ffn_dim(cfg: ModelConfig) -> int:
+    return ((int(cfg.d_model * 4 / 3) + 63) // 64) * 64
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int) -> Dict:
+    E = cfg.d_model
+    f32 = jnp.float32
+    return {t: jax.ShapeDtypeStruct((batch, E), f32)
+            for t in ("c", "n", "m", "h")}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    E = cfg.d_model
+    z = jnp.zeros((batch, E), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "m": z - 1e30, "h": z}
+
+
+def _slstm_scan(cfg: ModelConfig, params: Dict, pre: jnp.ndarray,
+                state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """pre: (B,S,4E) input preactivations (W x + b); recurrent R h added
+    per step. Sequential by construction."""
+    B, S, _ = pre.shape
+    E = cfg.d_model
+    H = cfg.n_heads
+    D = E // H
+    R = params["r_zifo"].astype(jnp.float32)             # (H, D, 4D)
+
+    def step(carry, t):
+        c, n, m, h = carry
+        hh = h.reshape(B, H, D)
+        rec = jnp.einsum("bhd,hdf->bhf", hh, R).reshape(B, 4 * E)
+        zifo = pre[:, t].astype(jnp.float32) + _interleave(rec, E, H, D)
+        z, i, f, o = jnp.split(zifo, 4, axis=-1)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        m_new = jnp.maximum(f + m, i)                    # exp forget gate
+        fp = jnp.exp(f + m - m_new)
+        ip = jnp.exp(i - m_new)
+        c_new = fp * c + ip * z
+        n_new = fp * n + ip
+        h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, m_new, h_new), h_new
+
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    carry, hs = jax.lax.scan(step, carry, jnp.arange(S))
+    hs = hs.transpose(1, 0, 2)                           # (B,S,E)
+    new_state = dict(zip(("c", "n", "m", "h"), carry))
+    return hs, new_state
+
+
+def _interleave(rec: jnp.ndarray, E: int, H: int, D: int) -> jnp.ndarray:
+    """(B, 4E) recurrent preacts laid out (H, 4, D) -> (4, H, D) flat."""
+    B = rec.shape[0]
+    return rec.reshape(B, H, 4, D).transpose(0, 2, 1, 3).reshape(B, 4 * E)
+
+
+def slstm_block(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
+                mode: str, cache: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, E = x.shape
+    cd = x.dtype
+    pre = x @ params["w_zifo"].astype(cd) + params["b_zifo"].astype(cd)
+    state = (cache if cache is not None and mode in ("decode",)
+             else init_slstm_cache(cfg, B))
+    hs, new_state = _slstm_scan(cfg, params, pre, state)
+    new_cache = new_state if mode in ("decode", "prefill") else None
+    h = cm.rmsnorm(hs.astype(cd), params["groupnorm"], cfg.norm_eps)
+    # gated FFN (pf 4/3)
+    ffn = _slstm_ffn_dim(cfg)
+    g = jax.nn.gelu(h @ params["ffn_gate"].astype(cd))
+    u = h @ params["ffn_up"].astype(cd)
+    out = (g * u) @ params["ffn_down"].astype(cd)
+    return out, new_cache

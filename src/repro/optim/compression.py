@@ -1,0 +1,93 @@
+"""Gradient compression with error feedback (cross-pod/DCN axis).
+
+Two codecs, both wrapped as :class:`GradientTransformation` so they chain
+into the optimizer stack *before* the learning-rate scale:
+
+* ``topk``  — keep the top ``ratio`` fraction of entries by magnitude;
+  the residual is carried in an error-feedback buffer (Stich et al.), so the
+  compressed SGD still converges (verified by test on a quadratic).
+* ``int8``  — per-tensor symmetric int8 quantization with error feedback.
+
+On a real deployment the compressed tensor is what crosses the slow DCN pod
+axis; here the transform is numerically exact to that pipeline (compress →
+decompress) with the bandwidth saving recorded in ``stats``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizer import GradientTransformation, _tree_map
+
+PyTree = Any
+
+
+class ErrorFeedbackState(NamedTuple):
+    error: PyTree
+
+
+def _topk_compress(g: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    if g.ndim == 0:
+        return g
+    flat = g.reshape(-1)
+    k = max(1, int(ratio * flat.size))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    return (flat * mask).reshape(g.shape)
+
+
+def _int8_compress(g: jnp.ndarray) -> jnp.ndarray:
+    if g.ndim == 0:
+        return g
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(g.dtype) * scale
+
+
+def compress_gradients(kind: str, ratio: float = 0.01
+                       ) -> GradientTransformation:
+    """Error-feedback compression transform. kind: "topk" | "int8"."""
+
+    def codec(g):
+        if kind == "topk":
+            return _topk_compress(g, ratio)
+        if kind == "int8":
+            return _int8_compress(g)
+        raise ValueError(kind)
+
+    def init(params):
+        err = _tree_map(
+            lambda p: (jnp.zeros_like(p)
+                       if p is not None and jnp.issubdtype(
+                           jnp.asarray(p).dtype, jnp.inexact) else None),
+            params)
+        return ErrorFeedbackState(error=err)
+
+    def update(grads, state, params=None):
+        compressed = _tree_map(
+            lambda g, e: None if g is None or e is None else codec(g + e),
+            grads, state.error)
+        new_err = _tree_map(
+            lambda g, e, c: None if c is None else (g + e) - c,
+            grads, state.error, compressed)
+        return compressed, ErrorFeedbackState(error=new_err)
+
+    return GradientTransformation(init, update)
+
+
+def compression_stats(kind: str, g: jnp.ndarray, ratio: float = 0.01
+                      ) -> Tuple[int, int]:
+    """(raw_bytes, wire_bytes) for one tensor — used by the trainer metrics
+    to report DCN bandwidth savings."""
+    raw = g.size * g.dtype.itemsize
+    if kind == "topk":
+        k = max(1, int(ratio * g.size))
+        wire = k * (g.dtype.itemsize + 4)     # value + index
+    elif kind == "int8":
+        wire = g.size + 4                     # int8 payload + scale
+    else:
+        wire = raw
+    return raw, wire

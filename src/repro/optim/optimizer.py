@@ -1,0 +1,225 @@
+"""Optimizers, schedules and gradient transformations (pure JAX, no optax).
+
+Implements the optax-style ``(init, update)`` GradientTransformation protocol
+so transforms chain, but with a tiny surface owned by this repo. All state is
+a pytree shardable like the params (ZeRO-style: optimizer state inherits the
+parameter PartitionSpecs).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], Tuple[PyTree, PyTree]]
+
+
+def _tree_map(f, *trees):
+    # None marks frozen/non-trainable leaves; keep it as a leaf so tree
+    # structures stay aligned between params, grads and optimizer state.
+    return jax.tree_util.tree_map(f, *trees, is_leaf=lambda x: x is None)
+
+
+def _is_trainable(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int, final_frac: float = 0.1
+                           ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def linear_warmup_schedule(peak_lr: float, warmup_steps: int
+                           ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        return peak_lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+    return schedule
+
+
+# ---------------------------------------------------------------------------
+# Core transforms
+# ---------------------------------------------------------------------------
+
+class ScaleByAdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+                  ) -> GradientTransformation:
+    def init(params):
+        def zeros():
+            # distinct trees: mu/nu must not alias (buffer donation)
+            return _tree_map(
+                lambda p: jnp.zeros_like(p) if _is_trainable(p) else None,
+                params)
+        return ScaleByAdamState(count=jnp.zeros((), jnp.int32),
+                                mu=zeros(), nu=zeros())
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        mu = _tree_map(
+            lambda g, m: None if m is None else b1 * m + (1 - b1) * g,
+            grads, state.mu)
+        nu = _tree_map(
+            lambda g, v: None if v is None else b2 * v + (1 - b2) * g * g,
+            grads, state.nu)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = _tree_map(
+            lambda m, v: None if m is None
+            else (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu)
+        return updates, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+class ClipState(NamedTuple):
+    pass
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ClipState()
+
+    def update(grads, state, params=None):
+        leaves = [g for g in jax.tree_util.tree_leaves(grads)
+                  if g is not None]
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+        return _tree_map(
+            lambda g: None if g is None else g * scale, grads), state
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jnp.ndarray
+
+
+def scale_by_schedule(schedule) -> GradientTransformation:
+    def init(params):
+        return ScaleByScheduleState(count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        lr = schedule(state.count)
+        return (_tree_map(lambda g: None if g is None else -lr * g, grads),
+                ScaleByScheduleState(count=state.count + 1))
+
+    return GradientTransformation(init, update)
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransformation:
+    def init(params):
+        return ClipState()
+
+    def update(grads, state, params=None):
+        if weight_decay == 0.0 or params is None:
+            return grads, state
+        return _tree_map(
+            lambda g, p: None if g is None
+            else g + weight_decay * (p.astype(g.dtype) if p.ndim > 1
+                                     else jnp.zeros_like(g)),
+            grads, params), state
+
+    return GradientTransformation(init, update)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+# ---------------------------------------------------------------------------
+# User-facing optimizers
+# ---------------------------------------------------------------------------
+
+def adamw(learning_rate, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          max_grad_norm: float = 0.0) -> GradientTransformation:
+    schedule = (learning_rate if callable(learning_rate)
+                else constant_schedule(learning_rate))
+    parts = []
+    if max_grad_norm:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    parts.append(scale_by_adam(b1, b2, eps))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    parts.append(scale_by_schedule(schedule))
+    return chain(*parts)
+
+
+class MomentumState(NamedTuple):
+    count: jnp.ndarray
+    trace: PyTree
+
+
+def sgd(learning_rate, momentum: float = 0.0) -> GradientTransformation:
+    schedule = (learning_rate if callable(learning_rate)
+                else constant_schedule(learning_rate))
+
+    def init(params):
+        trace = _tree_map(
+            lambda p: jnp.zeros_like(p) if _is_trainable(p) else None, params)
+        return MomentumState(count=jnp.zeros((), jnp.int32), trace=trace)
+
+    def update(grads, state, params=None):
+        lr = schedule(state.count)
+        if momentum:
+            trace = _tree_map(
+                lambda g, t: None if t is None else momentum * t + g,
+                grads, state.trace)
+            updates = _tree_map(
+                lambda t: None if t is None else -lr * t, trace)
+        else:
+            trace = state.trace
+            updates = _tree_map(
+                lambda g: None if g is None else -lr * g, grads)
+        return updates, MomentumState(count=state.count + 1, trace=trace)
+
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return _tree_map(
+        lambda p, u: p if u is None or not _is_trainable(p)
+        else (p + u.astype(p.dtype)),
+        params, updates)

@@ -1,0 +1,138 @@
+"""ParamSpec trees: one source of truth for shapes, dtypes, sharding and init.
+
+Every model module declares its parameters as a tree of :class:`ParamSpec`
+(shape + dtype + *logical axis names* + init rule). From that single tree the
+framework derives:
+
+  * materialized parameters (``init_params``),
+  * abstract ``ShapeDtypeStruct`` trees for AOT lowering (``abstract_params``),
+  * ``PartitionSpec`` trees via the logical-axis rule engine
+    (:mod:`repro.runtime.sharding`).
+
+This is the MaxText "logical axis" pattern without the flax dependency.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import butterfly as bf
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of a single parameter tensor.
+
+    ``axes``: logical axis name per dim (None = never sharded). Names are
+    resolved to mesh axes by :func:`repro.runtime.sharding.logical_to_pspec`.
+
+    ``init``: one of "normal", "scaled_normal" (1/sqrt(fan_in), fan_in = dim
+    matching axis name in ``fan_in_axis`` or last dim), "zeros", "ones",
+    "fjlt" (butterfly stage weights), "embedding" (normal * scale).
+    """
+
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "scaled_normal"
+    scale: float = 1.0
+    fan_in_dim: int = -1   # dim index used as fan-in for scaled init
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(key: jax.Array, spec: ParamSpec) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "fjlt":
+        # shape (p, 2, n), possibly with stacked leading layer axes
+        n = spec.shape[-1]
+        lead = spec.shape[:-3]
+        if not lead:
+            return bf.fjlt_weights(key, n, dtype=spec.dtype)
+        reps = int(np.prod(lead))
+        keys = jax.random.split(key, reps)
+        ws = jnp.stack([bf.fjlt_weights(k, n, dtype=spec.dtype)
+                        for k in keys])
+        return ws.reshape(spec.shape)
+    if spec.init == "normal":
+        return spec.scale * jax.random.normal(key, spec.shape,
+                                              dtype=jnp.float32
+                                              ).astype(spec.dtype)
+    if spec.init == "embedding":
+        return spec.scale * jax.random.normal(key, spec.shape,
+                                              dtype=jnp.float32
+                                              ).astype(spec.dtype)
+    if spec.init == "scaled_normal":
+        fan_in = spec.shape[spec.fan_in_dim]
+        s = spec.scale / math.sqrt(max(fan_in, 1))
+        return s * jax.random.normal(key, spec.shape,
+                                     dtype=jnp.float32).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(key: jax.Array, specs: PyTree) -> PyTree:
+    """Materialize a ParamSpec tree into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [_init_one(k, s) if is_spec(s) else s
+           for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(specs: PyTree) -> PyTree:
+    """ShapeDtypeStruct tree for AOT lowering — no allocation."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype) if is_spec(s) else s,
+        specs, is_leaf=is_spec)
+
+
+def param_count(specs: PyTree) -> int:
+    total = 0
+    for s in jax.tree_util.tree_leaves(specs, is_leaf=is_spec):
+        if is_spec(s):
+            total += int(np.prod(s.shape))
+    return total
+
+
+def param_bytes(specs: PyTree) -> int:
+    total = 0
+    for s in jax.tree_util.tree_leaves(specs, is_leaf=is_spec):
+        if is_spec(s):
+            total += int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+    return total
+
+
+def tree_paths(tree: PyTree) -> Dict[str, Any]:
+    """Flatten a tree into {'a/b/c': leaf} path map (debug/checkpointing)."""
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}" if prefix else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/{i}" if prefix else str(i), v)
+        else:
+            flat[prefix] = node
+
+    rec("", tree)
+    return flat

@@ -1,0 +1,163 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+A *rule set* maps logical axis names (``"embed"``, ``"heads"``, ``"vocab"``,
+``"experts"``, ``"batch"``, ``"seq_kv"``, ...) to mesh axes (a name, a tuple
+of names, or None). ``logical_to_pspec`` resolves a ParamSpec/activation axis
+tuple into a ``PartitionSpec``, enforcing:
+
+  * divisibility — if a dim is not divisible by the mesh-axis product, the
+    mesh axes are dropped for that dim (replicate rather than mis-shard;
+    e.g. 8 KV heads on a 16-way model axis);
+  * uniqueness — a mesh axis may appear at most once per spec; later uses
+    are dropped.
+
+Rule sets are plain dicts so hillclimbing a sharding layout = editing a dict.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.runtime import pytree as pt
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+RuleSet = Mapping[str, MeshAxes]
+
+# Default production rule set: DP(+pod) on batch, FSDP on embed, TP on
+# heads/mlp/vocab, EP on experts, SP on sequence, KV-cache seq on model.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "embed": ("pod", "data"),   # FSDP/ZeRO shard (incl. the DCN pod axis)
+    "embed_no_fsdp": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    # fallback TP shard for GQA weights when kv_heads doesn't divide the
+    # model axis (e.g. kv=8 on a 16-way axis): shard the head_dim instead
+    "head_dim": "model",
+    "mlp": "model",
+    "experts": "model",         # EP
+    "expert_mlp": None,
+    "seq": None,                # activation seq (train): replicated
+    "seq_sp": "model",          # sequence-parallel residual stream
+    "seq_kv": "model",          # KV-cache sequence shard
+    "rnn_state": "model",
+    "conv": None,
+    "stages": None,             # butterfly stage axis — replicated, tiny
+    "butterfly_n": None,
+}
+
+
+def _axes_tuple(entry: MeshAxes) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def resolve_axis(name: Optional[str], dim: int, mesh: Mesh,
+                 rules: RuleSet, used: set) -> MeshAxes:
+    """Resolve one logical axis to mesh axes honoring divisibility/uniqueness."""
+    if name is None:
+        return None
+    entry = rules.get(name, None)
+    axes = [a for a in _axes_tuple(entry)
+            if a in mesh.shape and a not in used]
+    # greedy prefix that divides the dim
+    chosen = []
+    prod = 1
+    for a in axes:
+        if dim % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    if not chosen:
+        return None
+    used.update(chosen)
+    return chosen[0] if len(chosen) == 1 else tuple(chosen)
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                     mesh: Mesh, rules: RuleSet) -> P:
+    used: set = set()
+    out = [resolve_axis(n, d, mesh, rules, used)
+           for n, d in zip(axes, shape)]
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_pspecs(specs: Any, mesh: Mesh, rules: RuleSet = DEFAULT_RULES
+                ) -> Any:
+    """ParamSpec tree -> PartitionSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda s: logical_to_pspec(s.axes or (None,) * len(s.shape),
+                                   s.shape, mesh, rules)
+        if pt.is_spec(s) else s,
+        specs, is_leaf=pt.is_spec)
+
+
+def spec_shardings(specs: Any, mesh: Mesh, rules: RuleSet = DEFAULT_RULES
+                   ) -> Any:
+    """ParamSpec tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, logical_to_pspec(
+            s.axes or (None,) * len(s.shape), s.shape, mesh, rules))
+        if pt.is_spec(s) else s,
+        specs, is_leaf=pt.is_spec)
+
+
+class ShardingCtx:
+    """Explicit (mesh, rules) context threaded into model code.
+
+    The trainer/dryrun installs it with :func:`use_sharding`; model code
+    calls :func:`constrain` which is a no-op when no context is active (so
+    smoke tests and single-device runs trace cleanly).
+    """
+
+    def __init__(self, mesh: Optional[Mesh], rules: RuleSet):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+
+_ACTIVE: list = []
+
+
+class use_sharding:
+    def __init__(self, mesh: Optional[Mesh], rules: RuleSet = DEFAULT_RULES):
+        self.ctx = ShardingCtx(mesh, rules)
+
+    def __enter__(self):
+        _ACTIVE.append(self.ctx)
+        return self.ctx
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+        return False
+
+
+def active_ctx() -> Optional[ShardingCtx]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    """``with_sharding_constraint`` by logical axes (no-op w/o context)."""
+    ctx = active_ctx()
+    if ctx is None or ctx.mesh is None:
+        return x
+    mesh = ctx.mesh
+    if np.prod(list(mesh.shape.values())) == 1:
+        return x
+    pspec = logical_to_pspec(axes, x.shape, mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+
+def batch_axes(mesh: Mesh, rules: RuleSet, batch: int) -> P:
+    """PartitionSpec for a (batch, ...) array sharded on the batch dim."""
+    used: set = set()
+    b = resolve_axis("batch", batch, mesh, rules, used)
+    return P(b)

@@ -1,0 +1,123 @@
+"""Training loop: prefetched data, checkpoint/resume, straggler accounting.
+
+The Trainer is deliberately host-side thin: all math lives in the jitted
+step function; the loop does data, checkpoints, failure handling, logging.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointing import CheckpointManager
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import Prefetcher, SyntheticLM, for_model
+from repro.models import lm
+from repro.optim import optimizer as opt
+from repro.runtime import pytree as pt
+from repro.runtime.fault_tolerance import StragglerMonitor
+from repro.train import steps as steps_lib
+
+
+@dataclass
+class TrainResult:
+    steps_run: int
+    losses: List[float]
+    resumed_from: Optional[int]
+    step_times: List[float] = field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, train_cfg: TrainConfig,
+                 seq_len: int, global_batch: int,
+                 data: Optional[SyntheticLM] = None):
+        self.cfg = model_cfg
+        self.tc = train_cfg
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.data = data or for_model(model_cfg, seq_len, global_batch,
+                                      seed=train_cfg.seed)
+        self.tx = steps_lib.make_optimizer(train_cfg)
+        self.step_fn = jax.jit(steps_lib.make_train_step(
+            model_cfg, self.tx, train_cfg.microbatches),
+            donate_argnums=(0, 1))
+        self.ckpt = (CheckpointManager(train_cfg.checkpoint_dir,
+                                       keep=train_cfg.keep_checkpoints)
+                     if train_cfg.checkpoint_dir else None)
+
+    def init_state(self, seed: int = 0):
+        specs = lm.model_specs(self.cfg)
+        params = pt.init_params(jax.random.PRNGKey(seed), specs)
+        opt_state = self.tx.init(params)
+        return params, opt_state
+
+    def _make_batch_arrays(self, batch: Dict[str, np.ndarray]
+                           ) -> Dict[str, jnp.ndarray]:
+        out = {k: jnp.asarray(v) for k, v in batch.items()}
+        B = out["tokens"].shape[0]
+        cfg = self.cfg
+        rng = np.random.default_rng(1234)
+        if cfg.frontend == "vision":
+            out["frontend_embeds"] = jnp.asarray(rng.normal(
+                size=(B, cfg.frontend_tokens, cfg.d_model)), jnp.float32)
+        if cfg.n_enc_layers:
+            out["frames"] = jnp.asarray(rng.normal(
+                size=(B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+        return out
+
+    def run(self, steps: int, params=None, opt_state=None,
+            resume: bool = True) -> TrainResult:
+        if params is None:
+            params, opt_state = self.init_state(self.tc.seed)
+
+        start_step = 0
+        resumed_from = None
+        if self.ckpt is not None and resume:
+            tmpl = {"params": params, "opt": opt_state}
+            s, tree, extra = self.ckpt.restore(tmpl)
+            if s is not None:
+                params = jax.tree_util.tree_map(
+                    lambda t, a: jnp.asarray(a) if a is not None else t,
+                    tmpl["params"], tree["params"],
+                    is_leaf=lambda x: x is None)
+                opt_state = jax.tree_util.tree_map(
+                    lambda t, a: (jnp.asarray(a) if a is not None else None),
+                    tmpl["opt"], tree["opt"], is_leaf=lambda x: x is None)
+                start_step = s
+                resumed_from = s
+
+        prefetch = Prefetcher(self.data, start_step=start_step)
+        straggler = StragglerMonitor(["host0"])
+        losses: List[float] = []
+        step_times: List[float] = []
+        try:
+            for i in range(start_step, start_step + steps):
+                step_idx, raw = next(prefetch)
+                batch = self._make_batch_arrays(raw)
+                t0 = time.monotonic()
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.monotonic() - t0
+                straggler.record({"host0": dt})
+                losses.append(loss)
+                step_times.append(dt)
+                if (self.ckpt is not None and self.tc.checkpoint_every
+                        and (i + 1) % self.tc.checkpoint_every == 0):
+                    self.ckpt.save(i + 1, {"params": params,
+                                           "opt": opt_state},
+                                   extra={"loss": loss}, async_=True)
+        finally:
+            prefetch.close()
+            if self.ckpt is not None:
+                self.ckpt.wait()
+        self.params = params
+        self.opt_state = opt_state
+        return TrainResult(steps_run=steps, losses=losses,
+                           resumed_from=resumed_from,
+                           step_times=step_times)

@@ -1,0 +1,139 @@
+"""Attention equivalences: masked == blockwise == flash oracle; sliding
+windows; and the critical prefill+decode == full-forward consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.kernels import ref
+from repro.models import attention as attn
+from repro.models import lm
+from repro.runtime import pytree as pt
+
+
+def _qkv(B=2, S=64, KV=2, G=2, D=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 24])
+@pytest.mark.parametrize("dynamic", [True, False])
+def test_blockwise_matches_masked(window, dynamic):
+    B, S, KV, G, D = 2, 64, 2, 2, 16
+    q, k, v = _qkv(B, S, KV, G, D)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    want = attn._attend_masked(q, k, v, pos, pos, causal=True, window=window)
+    got = attn._attend_blockwise(q, k, v, causal=True, window=window,
+                                 block_q=16, block_kv=16,
+                                 dynamic_bounds=dynamic)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_masked_matches_flash_oracle():
+    """Grouped-query masked attention == reference flash oracle with
+    explicitly repeated KV heads."""
+    B, S, KV, G, D = 2, 32, 2, 3, 8
+    q, k, v = _qkv(B, S, KV, G, D, seed=1)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    got = attn._attend_masked(q, k, v, pos, pos, causal=True, window=0)
+    H = KV * G
+    qh = q.reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    krep = jnp.repeat(k, G, axis=2).transpose(0, 2, 1, 3)
+    vrep = jnp.repeat(v, G, axis=2).transpose(0, 2, 1, 3)
+    want = ref.flash_attention_ref(qh, krep, vrep, causal=True)
+    want = want.transpose(0, 2, 1, 3).reshape(B, S, KV, G, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Serving consistency: prefill + decode must reproduce the full forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", [
+    "smollm-135m", "gemma3-27b", "recurrentgemma-2b", "xlstm-125m",
+    "seamless-m4t-medium", "internvl2-1b", "olmoe-1b-7b",
+])
+def test_prefill_decode_matches_full_forward(arch):
+    """Prefill S tokens, then decode token S; logits must match a full
+    forward over S+1 tokens (validates every cache implementation: ring
+    buffers, RG-LRU state, mLSTM/sLSTM state, cross-attention KV)."""
+    cfg = registry.get(arch + "-smoke").with_(compute_dtype="float32")
+    if cfg.n_experts:
+        # a *dropping* MoE is not step-invariant by design (capacity depends
+        # on the token count); disable drops to test cache consistency
+        cfg = cfg.with_(capacity_factor=64.0)
+    specs = lm.model_specs(cfg)
+    params = pt.init_params(jax.random.PRNGKey(0), specs)
+    B, S = 2, 24
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)),
+                       jnp.int32)
+    batch_full = {"tokens": toks}
+    batch_prefill = {"tokens": toks[:, :S]}
+    if cfg.frontend == "vision":
+        fe = jnp.asarray(rng.normal(size=(B, cfg.frontend_tokens,
+                                          cfg.d_model)), jnp.float32)
+        batch_full["frontend_embeds"] = fe
+        batch_prefill["frontend_embeds"] = fe
+    if cfg.n_enc_layers:
+        fr = jnp.asarray(rng.normal(size=(B, cfg.enc_seq, cfg.d_model)),
+                         jnp.float32)
+        batch_full["frames"] = fr
+        batch_prefill["frames"] = fr
+
+    # full forward logits at position S (predicting token S+1)
+    full_logits = _forward_logits(cfg, params, batch_full)   # (B, S+1, V)
+
+    caches = lm.init_caches(cfg, B, S + 1)
+    _, caches = lm.prefill(cfg, params, batch_prefill, caches)
+    extra = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    logits_dec, _ = lm.decode_step(cfg, params, toks[:, S], caches,
+                                   jnp.asarray(S + extra, jnp.int32))
+    want = full_logits[:, S + extra]
+    np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def _forward_logits(cfg, params, batch):
+    from repro.models import common as cm
+    tokens = batch["tokens"]
+    x = lm.embed_inputs(cfg, params, tokens, batch.get("frontend_embeds"))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = lm.run_encoder(cfg, params, batch["frames"])
+    x, _, _ = lm.backbone(cfg, params, x, positions=positions, mode="train",
+                          enc_out=enc_out)
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return cm.head_apply(cfg, params["head"], params["embed"], x)
+
+
+def test_multi_step_decode_consistency():
+    """Greedy decode 4 tokens step-by-step == teacher-forced full forward."""
+    cfg = registry.get("smollm-135m-smoke").with_(compute_dtype="float32")
+    params = pt.init_params(jax.random.PRNGKey(1), lm.model_specs(cfg))
+    B, S, T = 1, 16, 4
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    caches = lm.init_caches(cfg, B, S + T)
+    logits, caches = lm.prefill(cfg, params, {"tokens": toks}, caches)
+    seq = [int(jnp.argmax(logits[0]))]
+    for t in range(T - 1):
+        logits, caches = lm.decode_step(
+            cfg, params, jnp.asarray([seq[-1]], jnp.int32), caches,
+            jnp.asarray(S + t, jnp.int32))
+        seq.append(int(jnp.argmax(logits[0])))
+    # teacher-forced check
+    all_toks = jnp.concatenate(
+        [toks, jnp.asarray([seq[:-1]], jnp.int32)], axis=1)
+    full = _forward_logits(cfg, params, {"tokens": all_toks})
+    want = [int(jnp.argmax(full[0, S - 1 + t])) for t in range(T)]
+    assert seq == want

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs.
+Also covers the butterfly variants (the paper's §3.2 replacement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import lm
+from repro.runtime import pytree as pt
+
+ARCHS = registry.names()
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        batch["frontend_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.n_enc_layers:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = registry.get(arch + "-smoke")
+    params = pt.init_params(jax.random.PRNGKey(0), lm.model_specs(cfg))
+    batch = _batch(cfg)
+    loss, metrics = lm.loss_fn(cfg, params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: lm.loss_fn(cfg, p, batch)[0])(params)
+    norms = [float(jnp.sum(jnp.abs(g)))
+             for g in jax.tree_util.tree_leaves(grads)]
+    assert all(np.isfinite(n) for n in norms)
+    assert sum(norms) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = registry.get(arch + "-smoke")
+    params = pt.init_params(jax.random.PRNGKey(0), lm.model_specs(cfg))
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    caches = lm.init_caches(cfg, B, S + 1)
+    logits, caches = lm.prefill(cfg, params, batch, caches)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    extra = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, _ = lm.decode_step(cfg, params, tok, caches,
+                                jnp.asarray(S + extra, jnp.int32))
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "olmoe-1b-7b",
+                                  "xlstm-125m", "seamless-m4t-medium"])
+def test_smoke_butterfly_variant(arch):
+    """The paper's replacement applied to lm_head+mlp trains with finite
+    grads and ~10x fewer head/mlp parameters."""
+    cfg = registry.get(arch + "-butterfly-smoke")
+    dense_cfg = registry.get(arch + "-smoke")
+    params = pt.init_params(jax.random.PRNGKey(0), lm.model_specs(cfg))
+    batch = _batch(cfg)
+    loss, _ = lm.loss_fn(cfg, params, batch)
+    assert bool(jnp.isfinite(loss))
+    n_b = pt.param_count(lm.model_specs(cfg))
+    n_d = pt.param_count(lm.model_specs(
+        dense_cfg.with_(tie_embeddings=False)))
+    assert n_b < n_d
+
+
+def test_exact_assigned_configs():
+    """The full configs must match the assignment sheet exactly."""
+    a = registry.get("olmoe-1b-7b")
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.d_ff,
+            a.vocab_size, a.n_experts, a.top_k) == \
+        (16, 2048, 16, 16, 1024, 50304, 64, 8)
+    b = registry.get("dbrx-132b")
+    assert (b.n_layers, b.d_model, b.n_heads, b.n_kv_heads, b.d_ff,
+            b.vocab_size, b.n_experts, b.top_k) == \
+        (40, 6144, 48, 8, 10752, 100352, 16, 4)
+    c = registry.get("smollm-135m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (30, 576, 9, 3, 1536, 49152)
+    d = registry.get("gemma3-27b")
+    assert (d.n_layers, d.d_model, d.n_heads, d.n_kv_heads, d.d_ff,
+            d.vocab_size) == (62, 5376, 32, 16, 21504, 262144)
+    assert d.block_unit.count("local") == 5 and "global" in d.block_unit
+    e = registry.get("gemma-7b")
+    assert (e.n_layers, e.d_model, e.n_heads, e.n_kv_heads, e.d_ff,
+            e.vocab_size, e.head_dim) == (28, 3072, 16, 16, 24576, 256000,
+                                          256)
+    f = registry.get("mistral-large-123b")
+    assert (f.n_layers, f.d_model, f.n_heads, f.n_kv_heads, f.d_ff,
+            f.vocab_size) == (88, 12288, 96, 8, 28672, 32768)
+    g = registry.get("recurrentgemma-2b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff,
+            g.vocab_size) == (26, 2560, 10, 1, 7680, 256000)
+    assert g.block_unit == ("rec", "rec", "local")
+    h = registry.get("xlstm-125m")
+    assert (h.n_layers, h.d_model, h.n_heads, h.vocab_size) == \
+        (12, 768, 4, 50304)
+    i = registry.get("internvl2-1b")
+    assert (i.n_layers, i.d_model, i.n_heads, i.n_kv_heads, i.d_ff,
+            i.vocab_size) == (24, 896, 14, 2, 4864, 151655)
+    j = registry.get("seamless-m4t-medium")
+    assert (j.n_layers, j.d_model, j.n_heads, j.n_kv_heads, j.d_ff,
+            j.vocab_size) == (12, 1024, 16, 16, 4096, 256206)
+    assert j.n_enc_layers == 12
+
+
+def test_layer_pattern_coverage():
+    """n_layers == repeats·|unit| + |tail| for every arch."""
+    for name in ARCHS:
+        cfg = registry.get(name)
+        total = cfg.unit_repeats * len(cfg.block_unit) + len(cfg.tail_layers)
+        assert total == cfg.n_layers, name

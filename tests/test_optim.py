@@ -1,0 +1,123 @@
+"""Optimizers, schedules and error-feedback gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import optimizer as opt
+from repro.optim.compression import compress_gradients, compression_stats
+
+
+def _quadratic():
+    A = jnp.asarray(np.diag(np.linspace(1.0, 10.0, 8)), jnp.float32)
+    b = jnp.arange(8, dtype=jnp.float32)
+
+    def loss(x):
+        return 0.5 * x @ A @ x - b @ x
+
+    x_star = jnp.linalg.solve(A, b)
+    return loss, x_star
+
+
+def test_adamw_converges_on_quadratic():
+    loss, x_star = _quadratic()
+    tx = opt.adamw(0.1)
+    x = jnp.zeros(8)
+    state = tx.init(x)
+    for _ in range(400):
+        g = jax.grad(loss)(x)
+        u, state = tx.update(g, state, x)
+        x = opt.apply_updates(x, u)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_star), atol=0.05)
+
+
+def test_sgd_momentum_converges():
+    loss, x_star = _quadratic()
+    tx = opt.sgd(0.02, momentum=0.9)
+    x = jnp.zeros(8)
+    state = tx.init(x)
+    for _ in range(500):
+        g = jax.grad(loss)(x)
+        u, state = tx.update(g, state, x)
+        x = opt.apply_updates(x, u)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_star), atol=0.05)
+
+
+def test_clip_by_global_norm():
+    tx = opt.clip_by_global_norm(1.0)
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((4,), -10.0)}
+    state = tx.init(g)
+    clipped, _ = tx.update(g, state)
+    total = sum(float(jnp.sum(jnp.square(x)))
+                for x in jax.tree_util.tree_leaves(clipped))
+    assert abs(total - 1.0) < 1e-4
+
+
+def test_warmup_cosine_schedule_shape():
+    sched = opt.warmup_cosine_schedule(1.0, 10, 100)
+    assert float(sched(0)) == 0.0
+    assert abs(float(sched(10)) - 1.0) < 1e-6
+    assert float(sched(5)) == pytest.approx(0.5)
+    assert float(sched(100)) < float(sched(50)) < float(sched(10))
+
+
+def test_frozen_leaves_skipped():
+    """Integer (non-trainable) leaves must survive the optimizer untouched."""
+    tx = opt.adamw(0.1)
+    params = {"w": jnp.ones(3), "idx": jnp.arange(3, dtype=jnp.int32)}
+    state = tx.init(params)
+    grads = {"w": jnp.ones(3), "idx": None}
+    u, state = tx.update(grads, state, params)
+    new = opt.apply_updates(params, u)
+    assert new["idx"].dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(new["idx"]), np.arange(3))
+
+
+# ---------------------------------------------------------------------------
+# Compression
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,ratio", [("topk", 0.25), ("int8", 0.0)])
+def test_error_feedback_compression_converges(kind, ratio):
+    """Compressed-gradient descent with error feedback still converges on a
+    quadratic (the Stich et al. guarantee this implements)."""
+    loss, x_star = _quadratic()
+    tx = opt.chain(compress_gradients(kind, ratio),
+                   opt.sgd(0.02, momentum=0.9))
+    x = jnp.zeros(8)
+    state = tx.init(x)
+    for _ in range(800):
+        g = jax.grad(loss)(x)
+        u, state = tx.update(g, state, x)
+        x = opt.apply_updates(x, u)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_star), atol=0.15)
+
+
+def test_topk_keeps_largest():
+    from repro.optim.compression import _topk_compress
+    g = jnp.asarray([0.1, -5.0, 0.2, 3.0])
+    out = np.asarray(_topk_compress(g, 0.5))
+    np.testing.assert_array_equal(out != 0, [False, True, False, True])
+
+
+def test_error_feedback_accumulates_residual():
+    tx = compress_gradients("topk", 0.25)
+    g = {"w": jnp.asarray([1.0, 0.5, 0.25, 0.1])}
+    state = tx.init(g)
+    c1, state = tx.update(g, state)
+    # residual = g - compressed
+    resid = np.asarray(state.error["w"])
+    np.testing.assert_allclose(np.asarray(c1["w"]) + resid,
+                               np.asarray(g["w"]), atol=1e-6)
+    # the residual is re-injected next round
+    c2, state = tx.update(g, state)
+    assert float(jnp.abs(c2["w"]).sum()) > 0
+
+
+def test_compression_stats_bandwidth():
+    g = np.zeros((1024,), np.float32)
+    raw, wire_topk = compression_stats("topk", g, 0.01)
+    _, wire_int8 = compression_stats("int8", g)
+    assert wire_topk < raw / 10
+    assert wire_int8 < raw / 3

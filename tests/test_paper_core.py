@@ -1,0 +1,200 @@
+"""Paper-facing behaviour: Proposition 3.1 sandwich approximation, Theorem 1
+critical-point loss, two-phase training (§5.3) and learned sketching (§6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import butterfly as bf
+from repro.core import encdec
+from repro.core import layers as bl
+from repro.core import sketch
+
+
+# ---------------------------------------------------------------------------
+# §3.2 sandwich
+# ---------------------------------------------------------------------------
+
+def test_sandwich_exact_at_full_k():
+    """k = n makes J orthogonal-square ⇒ sandwich reproduces W exactly."""
+    n = 64
+    W = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (n, n))) / 8
+    spec = bl.make_spec(jax.random.PRNGKey(1), n, n, k_in=n, k_out=n,
+                        use_bias=False)
+    params = bl.init_from_dense(jax.random.PRNGKey(2), spec, jnp.asarray(W))
+    x = jax.random.normal(jax.random.PRNGKey(3), (7, n))
+    got = bl.butterfly_linear_apply(spec, params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x) @ W.T,
+                               atol=2e-4)
+
+
+def test_sandwich_error_decreases_with_k():
+    n = 128
+    W = np.array(jax.random.normal(jax.random.PRNGKey(4), (n, n)))
+    W = W / np.sqrt(n)
+    x = np.array(jax.random.normal(jax.random.PRNGKey(5), (n,)))
+    x = x / np.linalg.norm(x)
+    errs = []
+    for k in (8, 32, 96, 128):
+        spec = bl.make_spec(jax.random.PRNGKey(6), n, n, k_in=k, k_out=k,
+                            use_bias=False)
+        p = bl.init_from_dense(jax.random.PRNGKey(7), spec, jnp.asarray(W))
+        approx = np.asarray(bl.butterfly_linear_apply(spec, p,
+                                                      jnp.asarray(x)))
+        errs.append(np.linalg.norm(approx - W @ x))
+    assert errs[-1] < 1e-3
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+
+
+def test_sandwich_param_count_near_linear():
+    """Paper's headline: n² -> O(n log n) parameters."""
+    for n in (256, 1024, 4096):
+        spec = bl.make_spec(jax.random.PRNGKey(8), n, n)
+        dense = bl.dense_param_count(n, n)
+        ours = bl.param_count(spec)
+        assert ours < dense / 7           # 7.7x at n=256, 84x at n=4096
+        assert ours < 13 * n * np.log2(n)  # near-linear growth
+
+
+def test_sandwich_trainable_recovers_linear_map():
+    """Gradient training of the sandwich fits a random dense map far beyond
+    its init accuracy (what §5.1 relies on)."""
+    from repro.optim import optimizer as opt
+    n, k = 32, 16
+    W = np.asarray(jax.random.normal(jax.random.PRNGKey(9), (n, n))) \
+        / np.sqrt(n)
+    spec = bl.make_spec(jax.random.PRNGKey(10), n, n, k_in=k, k_out=k,
+                        use_bias=False)
+    params = bl.init_from_dense(jax.random.PRNGKey(11), spec, jnp.asarray(W))
+    X = jax.random.normal(jax.random.PRNGKey(12), (256, n))
+    Y = X @ jnp.asarray(W).T
+
+    def loss(p):
+        return jnp.mean(jnp.square(bl.butterfly_linear_apply(spec, p, X)
+                                   - Y))
+
+    tx = opt.adamw(1e-2)
+    state = tx.init(params)
+    l0 = float(loss(params))
+    step = jax.jit(lambda p, s: _step(loss, tx, p, s))
+    for _ in range(150):
+        params, state = step(params, state)
+    l1 = float(loss(params))
+    assert l1 < 0.2 * l0
+
+
+def _step(loss, tx, p, s):
+    from repro.optim import optimizer as opt
+    g = jax.grad(loss)(p)
+    u, s = tx.update(g, s, p)
+    return opt.apply_updates(p, u), s
+
+
+# ---------------------------------------------------------------------------
+# §4 Theorem 1
+# ---------------------------------------------------------------------------
+
+def test_theorem1_closed_form_matches_prediction():
+    """Full-rank X: the loss at the closed-form (D,E) optimum equals
+    tr(YYᵀ) − Σ_{i∈[k]} λ_i(Σ(B)) exactly (Theorem 1 with I=[k])."""
+    n = d = 48
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(n, d)))
+    spec = encdec.make_spec(jax.random.PRNGKey(0), n=n, d=d, k=5)
+    params = encdec.init_params(jax.random.PRNGKey(1), spec)
+    D, E = encdec.optimal_DE(spec, params["B"], X, X)
+    loss = float(encdec.loss_fn(spec, dict(params, D=D, E=E), X, X))
+    pred = float(encdec.theorem1_loss(spec, params["B"], X, X))
+    np.testing.assert_allclose(loss, pred, rtol=1e-4)
+
+
+def test_theorem1_suboptimal_subset_is_saddle_direction():
+    """Loss with eigvecs I ≠ [k] is strictly worse (the theorem's saddle
+    classification)."""
+    n = d = 32
+    X = jnp.asarray(np.random.default_rng(1).normal(size=(n, d)))
+    spec = encdec.make_spec(jax.random.PRNGKey(2), n=n, d=d, k=4)
+    params = encdec.init_params(jax.random.PRNGKey(3), spec)
+    Xt = encdec.apply_B(spec, params["B"], X)
+    G = Xt @ Xt.T
+    Ginv = jnp.linalg.pinv(G, rcond=1e-6)
+    S = encdec.sigma_B(spec, params["B"], X, X)
+    lam, U = jnp.linalg.eigh(S)
+    U = U[:, ::-1]
+    # pick I = {0,1,2,5} instead of [4]
+    Uk = U[:, jnp.asarray([0, 1, 2, 5])]
+    D = Uk
+    E = Uk.T @ X @ Xt.T @ Ginv
+    loss_bad = float(encdec.loss_fn(spec, dict(params, D=D, E=E), X, X))
+    pred_opt = float(encdec.theorem1_loss(spec, params["B"], X, X))
+    assert loss_bad > pred_opt + 1e-3
+
+
+def test_phase1_training_reaches_theory(tmp_path):
+    """§5.3 phase 1: training (D,E) with frozen B converges to the Theorem 1
+    optimum (local = global when B is fixed); phase 2 (training B too) does
+    not regress."""
+    n, d, r, k = 32, 32, 8, 4
+    U = np.linalg.qr(np.random.default_rng(0).normal(size=(n, r)))[0]
+    C = np.random.default_rng(1).normal(scale=0.3, size=(r, d))
+    X = jnp.asarray(U @ C)
+    spec = encdec.make_spec(jax.random.PRNGKey(4), n=n, d=d, k=k)
+    params = encdec.init_params(jax.random.PRNGKey(5), spec)
+    pred = float(encdec.theorem1_loss(spec, params["B"], X, X))
+    params1, _ = encdec.train(spec, params, X, X, steps=1500, lr=1e-2,
+                              train_B=False)
+    l1 = float(encdec.loss_fn(spec, params1, X, X))
+    assert l1 < pred * 1.05 + 1e-3
+    params2, _ = encdec.train(spec, params1, X, X, steps=300, lr=1e-3,
+                              train_B=True)
+    l2 = float(encdec.loss_fn(spec, params2, X, X))
+    assert l2 <= l1 * 1.02 + 1e-6
+
+
+def test_encdec_loss_close_to_pca():
+    """§5.2 claim: encoder-decoder butterfly loss ≈ Δ_k."""
+    n, d, r, k = 64, 64, 8, 8
+    U = np.linalg.qr(np.random.default_rng(2).normal(size=(n, r)))[0]
+    C = np.random.default_rng(3).normal(scale=0.3, size=(r, d))
+    X = jnp.asarray(U @ C)
+    spec = encdec.make_spec(jax.random.PRNGKey(6), n=n, d=d, k=k)
+    params = encdec.init_params(jax.random.PRNGKey(7), spec)
+    pca = float(encdec.pca_loss(X, X, k))       # = 0 for rank-8 data, k=8
+    D, E = encdec.optimal_DE(spec, params["B"], X, X)
+    loss = float(encdec.loss_fn(spec, dict(params, D=D, E=E), X, X))
+    assert loss <= pca + 0.05 * float(jnp.sum(X * X))
+
+
+# ---------------------------------------------------------------------------
+# §6 sketching
+# ---------------------------------------------------------------------------
+
+def _sketch_dataset(n=32, d=24, t=10, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n, d)) @ np.diag(np.linspace(1, 0.05, d))
+    return [jnp.asarray(base + 0.1 * rng.normal(size=(n, d)))
+            for _ in range(t)]
+
+
+def test_learned_butterfly_sketch_beats_random():
+    Xs = _sketch_dataset()
+    spec = sketch.make_spec(jax.random.PRNGKey(0), n=32, ell=8, k=4)
+    w, _ = sketch.train_butterfly_sketch(spec, jax.random.PRNGKey(1), Xs,
+                                         steps=80, lr=3e-3, batch=4)
+    err_learned = sketch.test_error(
+        lambda X: sketch.butterfly_sketch(spec, w, X), Xs, 4)
+    w0 = bf.fjlt_weights(jax.random.PRNGKey(2), spec.pad_n)
+    err_rand = sketch.test_error(
+        lambda X: sketch.butterfly_sketch(spec, w0, X), Xs, 4)
+    g = sketch.gaussian_sketch(jax.random.PRNGKey(3), 32, 8)
+    err_gauss = sketch.test_error(lambda X: g @ X, Xs, 4)
+    assert err_learned < err_rand
+    assert err_learned < err_gauss
+
+
+def test_learned_sparse_baseline_trains():
+    Xs = _sketch_dataset(seed=5)
+    rows, values, hist = sketch.train_sparse_sketch(
+        jax.random.PRNGKey(4), Xs, n=32, ell=8, k=4, steps=60, lr=3e-3,
+        batch=4, log_every=59)
+    assert hist[-1] <= hist[0]

@@ -1,0 +1,114 @@
+"""RG-LRU and xLSTM numerics: scan vs step vs chunkwise equivalences."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import rglru as rg
+from repro.models import xlstm as xl
+from repro.runtime import pytree as pt
+
+
+def test_rglru_scan_matches_stepwise():
+    cfg = registry.get("recurrentgemma-2b-smoke").with_(
+        compute_dtype="float32")
+    params = pt.init_params(jax.random.PRNGKey(0), rg.rglru_specs(cfg))
+    B, S, R = 2, 12, cfg.lru_width_
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, R))
+    hs, h_last = rg.rglru_scan(params, x)
+    h = jnp.zeros((B, R), jnp.float32)
+    outs = []
+    for t in range(S):
+        out, h = rg.rglru_step(params, x[:, t:t + 1], h)
+        outs.append(out[:, 0])
+    step_hs = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(step_hs),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_decay_bounded():
+    """a_t ∈ (0, 1] so the recurrence is stable by construction."""
+    cfg = registry.get("recurrentgemma-2b-smoke")
+    params = pt.init_params(jax.random.PRNGKey(2), rg.rglru_specs(cfg))
+    x = 5.0 * jax.random.normal(jax.random.PRNGKey(3),
+                                (1, 200, cfg.lru_width_))
+    hs, _ = rg.rglru_scan(params, x)
+    assert bool(jnp.isfinite(hs).all())
+
+
+def test_mlstm_parallel_matches_recurrent():
+    B, S, H, D = 2, 16, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    hs_par = xl.mlstm_parallel(q, k, v, ig, fg)
+    hs_rec, _ = xl.mlstm_recurrent(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(hs_par), np.asarray(hs_rec),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_mlstm_chunkwise_matches_recurrent(chunk):
+    B, S, H, D = 2, 32, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 1.0
+    hs_ck = xl.mlstm_chunkwise(q, k, v, ig, fg, chunk)
+    hs_rec, _ = xl.mlstm_recurrent(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(hs_ck), np.asarray(hs_rec),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_mlstm_chunkwise_state_handoff():
+    """State returned by chunkwise equals the recurrent end state, so
+    prefill→decode is seamless."""
+    B, S, H, D = 1, 24, 2, 4
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 1.0
+    _, st_ck = xl.mlstm_chunkwise(q, k, v, ig, fg, 8, return_state=True)
+    _, st_rec = xl.mlstm_recurrent(q, k, v, ig, fg)
+    for a, b in zip(st_ck, st_rec):
+        # C and n are stabilizer-relative; compare de-stabilized products
+        pass
+    # compare the *effect* of the states on a probe query instead
+    qp = jax.random.normal(jax.random.PRNGKey(7), (B, 1, H, D))
+    kp = jax.random.normal(jax.random.PRNGKey(8), (B, 1, H, D))
+    vp = jax.random.normal(jax.random.PRNGKey(9), (B, 1, H, D))
+    igp = jnp.zeros((B, 1, H))
+    fgp = jnp.zeros((B, 1, H)) + 2.0
+    out_ck, _ = xl.mlstm_recurrent(qp, kp, vp, igp, fgp, st_ck)
+    out_rec, _ = xl.mlstm_recurrent(qp, kp, vp, igp, fgp, st_rec)
+    np.testing.assert_allclose(np.asarray(out_ck), np.asarray(out_rec),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_slstm_finite_and_stateful():
+    cfg = registry.get("xlstm-125m-smoke").with_(compute_dtype="float32")
+    params = pt.init_params(jax.random.PRNGKey(10), xl.slstm_specs(cfg))
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(11), (B, S, cfg.d_model))
+    out, cache = xl.slstm_block(cfg, params, x, mode="prefill")
+    assert out.shape == x.shape and bool(jnp.isfinite(out).all())
+    # one more step from the cache == running S+1 from scratch
+    x1 = jax.random.normal(jax.random.PRNGKey(12), (B, 1, cfg.d_model))
+    out_step, _ = xl.slstm_block(cfg, params, x1, mode="decode",
+                                 cache=cache)
+    full, _ = xl.slstm_block(cfg, params,
+                             jnp.concatenate([x, x1], axis=1), mode="train")
+    np.testing.assert_allclose(np.asarray(out_step[:, 0]),
+                               np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
