@@ -1,0 +1,86 @@
+"""Fwd+bwd step time of the fused butterfly kernels vs the jnp oracle.
+
+The paper's pitch is cheaper *training*, so this measures a full
+value-and-grad step (input and weight cotangents) through
+``butterfly_apply`` and ``sandwich_apply`` across n. The fused Pallas path
+compiles only on TPU (Mosaic); on CPU those rows are emitted as skipped —
+interpret-mode timings are Python-loop artifacts, not kernel performance —
+while the jnp-oracle rows still track the unfused baseline per platform.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import butterfly as bf
+from repro.core import layers as bl
+from repro.kernels import ops
+from repro.kernels.sandwich import one_hot_select
+
+NS = (1024, 2048, 4096, 8192, 16384)
+
+
+def _butterfly_step(backend, w_shape_c):
+    c = w_shape_c
+
+    def loss(x, w):
+        return jnp.vdot(c, ops.butterfly_apply(x, w, backend=backend))
+
+    return jax.jit(jax.grad(loss, argnums=(0, 1)))
+
+
+def run(ns=NS, batch: int = 64) -> None:
+    on_tpu = jax.default_backend() == "tpu"
+    for n in ns:
+        w = bf.random_weights(jax.random.PRNGKey(0), n)
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, n))
+        c = jax.random.normal(jax.random.PRNGKey(2), (batch, n))
+        t_jnp = time_fn(_butterfly_step("jnp", c), x, w)
+        emit(f"backward/butterfly_fwdbwd_jnp_n{n}", t_jnp, f"batch={batch}")
+        if on_tpu:
+            t_fused = time_fn(_butterfly_step("pallas", c), x, w)
+            emit(f"backward/butterfly_fwdbwd_fused_n{n}", t_fused,
+                 f"batch={batch};speedup_vs_jnp={t_jnp / t_fused:.2f}x")
+        else:
+            emit(f"backward/butterfly_fwdbwd_fused_n{n}", 0.00,
+                 "status=skipped;reason=no_tpu_interpret_timing_meaningless")
+
+    # one sandwich shape: the full dense-layer replacement, fwd+bwd
+    n1 = n2 = ns[0]
+    k1 = k2 = max(2, int(math.log2(n1)))
+    spec = bl.make_spec(jax.random.PRNGKey(3), n1, n2, k_in=k1, k_out=k2,
+                        use_bias=False)
+    params = bl.init_butterfly_linear(jax.random.PRNGKey(4), spec)
+    x = jax.random.normal(jax.random.PRNGKey(5), (batch, n1))
+    c = jax.random.normal(jax.random.PRNGKey(6), (batch, n2))
+    sel_in = one_hot_select(spec.idx_in, n1)
+    sel_out = one_hot_select(spec.idx_out, n2).T
+    si, so = math.sqrt(n1 / k1), math.sqrt(n2 / k2)
+
+    def sandwich_step(backend):
+        def loss(x, b_in, core, b_out):
+            return jnp.vdot(c, ops.sandwich_apply(
+                x, b_in, sel_in, core, sel_out, b_out,
+                scale_in=si, scale_out=so, backend=backend))
+
+        fn = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))
+        return lambda: fn(x, params["b_in"], params["core"], params["b_out"])
+
+    t_jnp = time_fn(sandwich_step("jnp"))
+    emit(f"backward/sandwich_fwdbwd_jnp_n{n1}", t_jnp,
+         f"batch={batch};k={k1}")
+    if on_tpu:
+        t_fused = time_fn(sandwich_step("pallas"))
+        emit(f"backward/sandwich_fwdbwd_fused_n{n1}", t_fused,
+             f"batch={batch};k={k1};speedup_vs_jnp={t_jnp / t_fused:.2f}x")
+    else:
+        emit(f"backward/sandwich_fwdbwd_fused_n{n1}", 0.00,
+             "status=skipped;reason=no_tpu_interpret_timing_meaningless")
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# every emit() lands here too, so run.py can dump the whole run as a
+# machine-readable BENCH_*.json artifact (CI uploads it per PR)
+ROWS: List[Dict] = []
+
 
 def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
     """Median wall-time (µs) of a jitted callable."""
@@ -25,6 +29,8 @@ def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 2),
+                 "derived": derived})
     print(f"{name},{us_per_call:.2f},{derived}")
 
 

@@ -15,10 +15,10 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks import (bench_autoencoder, bench_kernels,  # noqa: E402
-                        bench_lm_butterfly, bench_nonlinear,
+from benchmarks import (bench_autoencoder, bench_backward,  # noqa: E402
+                        bench_kernels, bench_lm_butterfly, bench_nonlinear,
                         bench_param_counts, bench_sketch, bench_speed,
-                        bench_theorem1, bench_two_phase)
+                        bench_theorem1, bench_two_phase, common)
 
 
 def summarize_dryrun(out_dir: str = "experiments/dryrun") -> None:
@@ -36,13 +36,39 @@ def summarize_dryrun(out_dir: str = "experiments/dryrun") -> None:
               f"fit={r['hbm_fit']}")
 
 
+def write_json(mode: str) -> str:
+    """Dump every emitted row as BENCH_<mode>.json (the CI perf artifact)."""
+    import jax
+
+    path = f"BENCH_{mode}.json"
+    payload = {
+        "mode": mode,
+        "jax_backend": jax.default_backend(),
+        "rows": common.ROWS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
 def main() -> None:
-    fast = "--fast" in sys.argv
+    import argparse
+
+    parser = argparse.ArgumentParser(
+        description="paper benchmark runner (CSV on stdout + BENCH_*.json)")
+    # --quick (the CI gate) is an alias of the original --fast; argparse
+    # rejects typos instead of silently running the full multi-hour sweep
+    parser.add_argument("--quick", "--fast", dest="quick",
+                        action="store_true",
+                        help="reduced steps/sizes (the per-PR CI gate)")
+    fast = parser.parse_args().quick
     print("name,us_per_call,derived")
     bench_param_counts.run()
     bench_theorem1.run()
     bench_kernels.run()
     bench_speed.run()
+    bench_backward.run(ns=(1024, 2048) if fast else bench_backward.NS,
+                       batch=16 if fast else 64)
     bench_nonlinear.run(steps=120 if fast else 300)
     if fast:
         bench_autoencoder.run(train_steps=60)
@@ -56,6 +82,8 @@ def main() -> None:
         bench_sketch.run_ell_sweep()
         bench_lm_butterfly.run()
     summarize_dryrun()
+    path = write_json("quick" if fast else "full")
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -21,12 +21,16 @@ class ButterflyConfig:
 
     ``sites``: subset of {"lm_head", "mlp", "attn_out", "qkv"}.
     ``k_factor``: multiplies the paper's ``k = log2(n)`` choice.
+    ``backend``: kernel path for the sandwich ("auto" | "jnp" | "pallas" |
+    "pallas_interpret"); "auto" picks the fused Pallas kernels on TPU — for
+    training too, now that they carry custom_vjp backward kernels.
     """
 
     sites: Tuple[str, ...] = ("lm_head",)
     k_factor: float = 1.0
     seed: int = 0
     use_bias: bool = False
+    backend: str = "auto"
 
 
 @dataclass(frozen=True)

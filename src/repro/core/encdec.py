@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import butterfly as bf
+from repro.kernels import ops as kops
 from repro.optim import optimizer as opt
 
 
@@ -66,24 +67,32 @@ def init_params(key: jax.Array, spec: EncDecSpec) -> Dict[str, jnp.ndarray]:
     }
 
 
-def apply_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
-    """``B X`` for column-data ``X (n×d)`` -> (ℓ×d)."""
+def apply_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray, *,
+            backend: kops.Backend = "auto") -> jnp.ndarray:
+    """``B X`` for column-data ``X (n×d)`` -> (ℓ×d).
+
+    The butterfly product dispatches through :mod:`repro.kernels.ops`; the
+    fused Pallas path is differentiable (custom_vjp), so training through
+    ``apply_B`` keeps the single-HBM-round-trip kernel in both directions.
+    """
     Xp = X
     if spec.pad_n != spec.n:
         Xp = jnp.pad(X, ((0, spec.pad_n - spec.n), (0, 0)))
-    H = bf.butterfly_apply(w, Xp.T)                    # (d, pad_n)
+    H = kops.butterfly_apply(Xp.T, w, backend=backend)  # (d, pad_n)
     Ht = bf.truncate(H, spec.trunc_idx, spec.pad_n, spec.jl_scale)
     return Ht.T                                        # (ℓ, d)
 
 
-def forward(spec: EncDecSpec, params: Dict, X: jnp.ndarray) -> jnp.ndarray:
-    Xt = apply_B(spec, params["B"], X)
+def forward(spec: EncDecSpec, params: Dict, X: jnp.ndarray, *,
+            backend: kops.Backend = "auto") -> jnp.ndarray:
+    Xt = apply_B(spec, params["B"], X, backend=backend)
     return params["D"] @ (params["E"] @ Xt)
 
 
 def loss_fn(spec: EncDecSpec, params: Dict, X: jnp.ndarray,
-            Y: jnp.ndarray) -> jnp.ndarray:
-    Yb = forward(spec, params, X)
+            Y: jnp.ndarray, *,
+            backend: kops.Backend = "auto") -> jnp.ndarray:
+    Yb = forward(spec, params, X, backend=backend)
     return jnp.sum(jnp.square(Yb - Y))
 
 
@@ -168,17 +177,20 @@ def fjlt_pca_loss(key: jax.Array, X: jnp.ndarray, k: int, ell: int
 
 def train(spec: EncDecSpec, params: Dict, X: jnp.ndarray, Y: jnp.ndarray,
           steps: int, lr: float = 1e-3, train_B: bool = True,
-          log_every: int = 0) -> Tuple[Dict, list]:
+          log_every: int = 0,
+          backend: kops.Backend = "auto") -> Tuple[Dict, list]:
     """Full-batch Adam on the reconstruction loss.
 
     ``train_B=False`` freezes the butterfly (phase 1 of two-phase learning).
-    Returns (params, loss history).
+    ``backend`` selects the butterfly kernel path — on TPU the fused Pallas
+    kernel runs in the gradient too (custom_vjp). Returns (params, loss
+    history).
     """
     tx = opt.adamw(lr)
     state = tx.init(params)
 
     def masked_loss(p):
-        return loss_fn(spec, p, X, Y)
+        return loss_fn(spec, p, X, Y, backend=backend)
 
     @jax.jit
     def step(params, state):
@@ -199,12 +211,13 @@ def train(spec: EncDecSpec, params: Dict, X: jnp.ndarray, Y: jnp.ndarray,
 
 def train_two_phase(spec: EncDecSpec, params: Dict, X: jnp.ndarray,
                     Y: jnp.ndarray, steps1: int, steps2: int,
-                    lr: float = 1e-3, log_every: int = 0
+                    lr: float = 1e-3, log_every: int = 0,
+                    backend: kops.Backend = "auto"
                     ) -> Tuple[Dict, list, list]:
     """§5.3: phase 1 trains (D, E) with B frozen at its FJLT init (Theorem 1
     guarantees local = global here); phase 2 fine-tunes all three."""
     params, h1 = train(spec, params, X, Y, steps1, lr=lr, train_B=False,
-                       log_every=log_every)
+                       log_every=log_every, backend=backend)
     params, h2 = train(spec, params, X, Y, steps2, lr=lr, train_B=True,
-                       log_every=log_every)
+                       log_every=log_every, backend=backend)
     return params, h1, h2

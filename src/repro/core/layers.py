@@ -18,6 +18,7 @@ pjit (weights are tiny and replicated; activations shard on batch axes).
 
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
@@ -27,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import butterfly as bf
+from repro.kernels import ops as kops
 
 __all__ = [
     "ButterflySpec",
@@ -128,20 +130,52 @@ def init_from_dense(key: jax.Array, spec: ButterflySpec, W: jnp.ndarray,
     return params
 
 
+@functools.lru_cache(maxsize=None)
+def _selection_matrices(spec: ButterflySpec):
+    """Fixed one-hot truncate/scatter matrices for the fused kernel path.
+
+    Cached per spec (hashable, truncation indices are frozen at init) so the
+    matrices become jit-time constants instead of being rebuilt per call.
+    """
+    sel_in = kops.one_hot_select(spec.idx_in, spec.pad_in)
+    sel_out = kops.one_hot_select(spec.idx_out, spec.pad_out).T
+    return sel_in, sel_out
+
+
 def butterfly_linear_apply(spec: ButterflySpec, params: dict,
-                           x: jnp.ndarray) -> jnp.ndarray:
-    """Apply the sandwich along the last axis: (..., n_in) -> (..., n_out)."""
+                           x: jnp.ndarray, *,
+                           backend: kops.Backend = "auto") -> jnp.ndarray:
+    """Apply the sandwich along the last axis: (..., n_in) -> (..., n_out).
+
+    ``backend`` selects the kernel path (see :mod:`repro.kernels.ops`):
+    ``jnp`` runs the unfused reference ops below; ``pallas`` runs the fused
+    sandwich kernel — differentiable in both activations and weights via its
+    custom_vjp — and ``auto`` picks per platform.
+    """
     if x.shape[-1] != spec.n_in:
         raise ValueError(f"expected last dim {spec.n_in}, got {x.shape[-1]}")
+    resolved = kops.resolve_backend(backend)
     # pad to power of two
     if spec.pad_in != spec.n_in:
         pad = [(0, 0)] * (x.ndim - 1) + [(0, spec.pad_in - spec.n_in)]
         x = jnp.pad(x, pad)
-    h = bf.butterfly_apply(params["b_in"].astype(x.dtype), x)
-    h = bf.truncate(h, spec.idx_in, spec.pad_in, spec.jl_scale)      # (..., k1)
-    h = jnp.einsum("...i,oi->...o", h, params["core"].astype(x.dtype))
-    z = bf.untruncate(h, spec.idx_out, spec.pad_out, spec.jl_scale)  # (..., N2)
-    z = bf.butterfly_transpose_apply(params["b_out"].astype(x.dtype), z)
+    if resolved == "jnp":
+        h = bf.butterfly_apply(params["b_in"].astype(x.dtype), x)
+        h = bf.truncate(h, spec.idx_in, spec.pad_in, spec.jl_scale)  # (.., k1)
+        h = jnp.einsum("...i,oi->...o", h, params["core"].astype(x.dtype))
+        z = bf.untruncate(h, spec.idx_out, spec.pad_out,
+                          spec.jl_scale)                             # (.., N2)
+        z = bf.butterfly_transpose_apply(params["b_out"].astype(x.dtype), z)
+    else:
+        sel_in, sel_out = _selection_matrices(spec)
+        scale_in = (math.sqrt(spec.pad_in / spec.k_in)
+                    if spec.jl_scale else 1.0)
+        scale_out = (math.sqrt(spec.pad_out / spec.k_out)
+                     if spec.jl_scale else 1.0)
+        z = kops.sandwich_apply(x, params["b_in"], sel_in, params["core"],
+                                sel_out, params["b_out"],
+                                scale_in=scale_in, scale_out=scale_out,
+                                backend=resolved)
     if spec.pad_out != spec.n_out:
         z = z[..., : spec.n_out]
     if spec.use_bias and "bias" in params:

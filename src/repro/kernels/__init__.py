@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Fused Pallas kernels for the paper's compute hot-spots.
+
+``repro.kernels.ops`` is the public, backend-dispatched entry point; the
+per-kernel modules (``butterfly``, ``sandwich``, ``flash``) hold the kernel
+bodies and ``repro.kernels.ref`` the pure-jnp oracles.
+"""
+
+from repro.kernels.ops import (Backend, butterfly_apply, one_hot_select,
+                               resolve_backend, sandwich_apply)
+
+__all__ = ["Backend", "butterfly_apply", "one_hot_select",
+           "resolve_backend", "sandwich_apply"]

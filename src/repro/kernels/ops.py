@@ -1,16 +1,24 @@
 """Public jit'd entry points for the Pallas kernels.
 
-Backend selection:
+Backend selection (``auto`` | ``jnp`` | ``pallas`` | ``pallas_interpret``):
 
-* On TPU the compiled Pallas kernels run (Mosaic).
-* On CPU (this container) the *pure-jnp oracles* run for production paths
+* On TPU ``auto`` resolves to the compiled Pallas kernels (Mosaic) — for
+  inference *and* training: every fused kernel carries a
+  :func:`jax.custom_vjp` with a fused Pallas backward pass, so ``jax.grad``
+  through these entry points stays on the fast path instead of falling back
+  to log n unfused HBM round trips per stage.
+* On CPU (this container) ``auto`` resolves to the *pure-jnp oracles*
   (Pallas interpret mode executes the kernel body in Python — correct but
   slow), while tests explicitly request ``backend="pallas_interpret"`` to
-  validate the kernel bodies themselves.
+  validate the kernel bodies — forward and backward — themselves.
+* ``REPRO_KERNEL_BACKEND`` in the environment overrides what ``auto``
+  resolves to (read at trace time), e.g. to force the oracle path on TPU
+  when bisecting a kernel bug.
 """
 
 from __future__ import annotations
 
+import os
 from typing import Literal
 
 import jax
@@ -23,17 +31,36 @@ from repro.kernels.sandwich import one_hot_select
 
 Backend = Literal["auto", "jnp", "pallas", "pallas_interpret"]
 
+_CONCRETE = ("jnp", "pallas", "pallas_interpret")
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_backend(backend: Backend = "auto") -> str:
+    """Resolve ``auto`` to a concrete backend (env override, then platform)."""
+    if backend == "auto":
+        env = os.environ.get("REPRO_KERNEL_BACKEND", "").strip().lower()
+        if env and env != "auto":
+            backend = env
+        else:
+            backend = "pallas" if _on_tpu() else "jnp"
+    if backend not in _CONCRETE:
+        raise ValueError(f"unknown kernel backend {backend!r}; expected one "
+                         f"of {('auto',) + _CONCRETE}")
+    return backend
+
+
 def butterfly_apply(x: jnp.ndarray, w: jnp.ndarray, *,
                     transpose: bool = False,
                     backend: Backend = "auto") -> jnp.ndarray:
-    """Fused butterfly product over the last axis of ``x``."""
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "jnp"
+    """Fused butterfly product over the last axis of ``x``.
+
+    Differentiable under every backend; the Pallas backends use the fused
+    custom_vjp backward kernel.
+    """
+    backend = resolve_backend(backend)
     if backend == "jnp":
         return _ref.butterfly_ref(w.astype(x.dtype), x, transpose=transpose)
     interpret = backend == "pallas_interpret"
@@ -45,9 +72,12 @@ def sandwich_apply(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
                    b_out: jnp.ndarray, *, scale_in: float = 1.0,
                    scale_out: float = 1.0,
                    backend: Backend = "auto") -> jnp.ndarray:
-    """Fused butterfly sandwich (dense-layer replacement) over the last axis."""
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "jnp"
+    """Fused butterfly sandwich (dense-layer replacement) over the last axis.
+
+    Differentiable under every backend; the Pallas backends use the fused
+    custom_vjp backward kernel.
+    """
+    backend = resolve_backend(backend)
     if backend == "jnp":
         return _ref.sandwich_ref(x, b_in, core, b_out, sel_in, sel_out,
                                  scale_in, scale_out)
@@ -57,4 +87,5 @@ def sandwich_apply(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
                             interpret=interpret)
 
 
-__all__ = ["butterfly_apply", "sandwich_apply", "one_hot_select", "Backend"]
+__all__ = ["butterfly_apply", "sandwich_apply", "one_hot_select", "Backend",
+           "resolve_backend"]

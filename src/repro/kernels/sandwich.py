@@ -1,4 +1,4 @@
-"""Fused butterfly-sandwich Pallas kernel (TPU target).
+"""Fused butterfly-sandwich Pallas kernels (TPU target), forward and backward.
 
 Computes the paper's full dense-layer replacement ``J2ᵀ · W' · J1 · x`` in a
 single VMEM residency per activation tile:
@@ -11,12 +11,24 @@ Truncation/scatter are lowered as multiplications with fixed one-hot matrices
 gather across lanes, but one-hot matmuls ride the MXU (DESIGN.md §3).
 
 Five HBM round trips (one per op in the unfused jnp path) collapse into one.
+
+Training support: ``sandwich_matmul`` carries a :func:`jax.custom_vjp` whose
+backward pass is one fused Pallas kernel chaining, per activation tile:
+
+    recompute forward intermediates from the saved input tile
+    → butterfly-transpose VJP (per-stage ``da/db`` reductions)
+    → one-hot scatter/selection transposes
+    → small-dense-core gradient ``dW' = dh₂ᵀ h₁`` (MXU)
+    → input-butterfly VJP → dx
+
+Weight gradients (both butterflies + core) accumulate in float32 across the
+sequential batch grid into revisited output blocks. The fixed one-hot
+selection matrices get zero cotangents (they are structural, never trained).
 """
 
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -24,30 +36,88 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.butterfly import num_stages
-from repro.kernels.butterfly import _swap_halves, DEFAULT_BLOCK_B
+from repro.kernels.butterfly import (DEFAULT_BLOCK_B, _butterfly_bwd_block,
+                                     _flatten_batch, _stage_apply)
+
+__all__ = ["sandwich_matmul", "one_hot_select"]
+
+
+def _sandwich_forward_block(x, w_in_ref, sel_in_ref, core_ref, sel_out_ref,
+                            *, stages_in: int, scale_in: float,
+                            scale_out: float):
+    """Shared forward math up to the scatter output ``z`` (pre out-butterfly).
+
+    Returns ``(h1, z)``; ``h1`` is needed by the core gradient in backward.
+    """
+    for s in range(stages_in):
+        x = _stage_apply(x, w_in_ref[s, 0, :], w_in_ref[s, 1, :], 1 << s,
+                         transpose=False)
+    h1 = jnp.dot(x, sel_in_ref[...],
+                 preferred_element_type=jnp.float32)      # (bb, k1)
+    h1 = h1 * scale_in
+    h2 = jnp.dot(h1, core_ref[...].T.astype(h1.dtype),
+                 preferred_element_type=jnp.float32)      # (bb, k2)
+    z = jnp.dot(h2, sel_out_ref[...].astype(h2.dtype),
+                preferred_element_type=jnp.float32)       # (bb, n2)
+    z = z * scale_out
+    return h1, z
 
 
 def _sandwich_kernel(x_ref, w_in_ref, sel_in_ref, core_ref, sel_out_ref,
                      w_out_ref, o_ref, *, stages_in: int, stages_out: int,
                      scale_in: float, scale_out: float):
-    x = x_ref[...]                                        # (bb, n1)
-    for s in range(stages_in):
-        a = w_in_ref[s, 0, :]
-        b = w_in_ref[s, 1, :]
-        x = a * x + b * _swap_halves(x, 1 << s)
-    h = jnp.dot(x, sel_in_ref[...],
-                preferred_element_type=jnp.float32)       # (bb, k1)
-    h = h * scale_in
-    h = jnp.dot(h, core_ref[...].T.astype(h.dtype),
-                preferred_element_type=jnp.float32)       # (bb, k2)
-    z = jnp.dot(h, sel_out_ref[...].astype(h.dtype),
-                preferred_element_type=jnp.float32)       # (bb, n2)
-    z = (z * scale_out).astype(x.dtype)
+    x = x_ref[...]
+    _, z = _sandwich_forward_block(x, w_in_ref, sel_in_ref, core_ref,
+                                   sel_out_ref, stages_in=stages_in,
+                                   scale_in=scale_in, scale_out=scale_out)
+    z = z.astype(x.dtype)
     for s in reversed(range(stages_out)):
-        a = w_out_ref[s, 0, :]
-        b = w_out_ref[s, 1, :]
-        z = a * z + _swap_halves(b * z, 1 << s)
+        z = _stage_apply(z, w_out_ref[s, 0, :], w_out_ref[s, 1, :], 1 << s,
+                         transpose=True)
     o_ref[...] = z
+
+
+def _sandwich_bwd_kernel(x_ref, w_in_ref, sel_in_ref, core_ref, sel_out_ref,
+                         w_out_ref, g_ref, dx_ref, dwin_ref, dcore_ref,
+                         dwout_ref, *, stages_in: int, stages_out: int,
+                         scale_in: float, scale_out: float):
+    x = x_ref[...]
+    g = g_ref[...]
+    # --- recompute forward intermediates (VMEM-resident, no stash) ---
+    h1, z = _sandwich_forward_block(x, w_in_ref, sel_in_ref, core_ref,
+                                    sel_out_ref, stages_in=stages_in,
+                                    scale_in=scale_in, scale_out=scale_out)
+    z = z.astype(x.dtype)
+    # --- VJP through the output (transposed) butterfly ---
+    gz, dwout = _butterfly_bwd_block(z, w_out_ref, g, stages_out,
+                                     transpose=True)
+    # --- scatter / core / selection chain (float32 on the MXU) ---
+    gzf = gz.astype(jnp.float32) * scale_out
+    dh2 = jnp.dot(gzf, sel_out_ref[...].astype(jnp.float32).T,
+                  preferred_element_type=jnp.float32)     # (bb, k2)
+    dcore = jnp.dot(dh2.T, h1,
+                    preferred_element_type=jnp.float32)   # (k2, k1)
+    dh1 = jnp.dot(dh2, core_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)     # (bb, k1)
+    du = jnp.dot(dh1 * scale_in, sel_in_ref[...].astype(jnp.float32).T,
+                 preferred_element_type=jnp.float32)      # (bb, n1)
+    du = du.astype(x.dtype)
+    # --- VJP through the input butterfly ---
+    dx, dwin = _butterfly_bwd_block(x, w_in_ref, du, stages_in,
+                                    transpose=False)
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        dwin_ref[...] = dwin
+        dcore_ref[...] = dcore
+        dwout_ref[...] = dwout
+
+    @pl.when(pl.program_id(0) > 0)
+    def _():
+        dwin_ref[...] += dwin
+        dcore_ref[...] += dcore
+        dwout_ref[...] += dwout
 
 
 def one_hot_select(idx, n: int, dtype=jnp.float32) -> jnp.ndarray:
@@ -55,6 +125,103 @@ def one_hot_select(idx, n: int, dtype=jnp.float32) -> jnp.ndarray:
     sel = np.zeros((n, len(idx)), dtype=np.float32)
     sel[np.asarray(idx), np.arange(len(idx))] = 1.0
     return jnp.asarray(sel, dtype=dtype)
+
+
+def _sandwich_specs(bb, n1, n2, p1, p2, k1, k2):
+    return [
+        pl.BlockSpec((bb, n1), lambda i: (i, 0)),
+        pl.BlockSpec((p1, 2, n1), lambda i: (0, 0, 0)),
+        pl.BlockSpec((n1, k1), lambda i: (0, 0)),
+        pl.BlockSpec((k2, k1), lambda i: (0, 0)),
+        pl.BlockSpec((k2, n2), lambda i: (0, 0)),
+        pl.BlockSpec((p2, 2, n2), lambda i: (0, 0, 0)),
+    ]
+
+
+def _sandwich_fwd_call(x, b_in, sel_in, core, sel_out, b_out, scale_in,
+                       scale_out, block_b, interpret):
+    p1, _, n1 = b_in.shape
+    p2, _, n2 = b_out.shape
+    k1 = sel_in.shape[1]
+    k2 = sel_out.shape[0]
+    assert core.shape == (k2, k1), (core.shape, k1, k2)
+    x2, lead, b, bb, padded_b = _flatten_batch(x, block_b)
+    grid = (padded_b // bb,)
+    out = pl.pallas_call(
+        functools.partial(_sandwich_kernel, stages_in=num_stages(n1),
+                          stages_out=num_stages(n2),
+                          scale_in=scale_in, scale_out=scale_out),
+        grid=grid,
+        in_specs=_sandwich_specs(bb, n1, n2, p1, p2, k1, k2),
+        out_specs=pl.BlockSpec((bb, n2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_b, n2), x.dtype),
+        interpret=interpret,
+    )(x2, b_in.astype(x.dtype), sel_in.astype(x.dtype), core,
+      sel_out, b_out.astype(x.dtype))
+    return out[:b].reshape(*lead, n2)
+
+
+def _sandwich_bwd_call(x, b_in, sel_in, core, sel_out, b_out, g, scale_in,
+                       scale_out, block_b, interpret):
+    p1, _, n1 = b_in.shape
+    p2, _, n2 = b_out.shape
+    k1 = sel_in.shape[1]
+    k2 = sel_out.shape[0]
+    x2, lead, b, bb, padded_b = _flatten_batch(x, block_b)
+    g2, _, _, _, _ = _flatten_batch(g.astype(x.dtype), block_b)
+    grid = (padded_b // bb,)
+    in_specs = _sandwich_specs(bb, n1, n2, p1, p2, k1, k2)
+    in_specs.append(pl.BlockSpec((bb, n2), lambda i: (i, 0)))
+    dx, dwin, dcore, dwout = pl.pallas_call(
+        functools.partial(_sandwich_bwd_kernel, stages_in=num_stages(n1),
+                          stages_out=num_stages(n2),
+                          scale_in=scale_in, scale_out=scale_out),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bb, n1), lambda i: (i, 0)),
+            pl.BlockSpec((p1, 2, n1), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k2, k1), lambda i: (0, 0)),
+            pl.BlockSpec((p2, 2, n2), lambda i: (0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded_b, n1), x.dtype),
+            jax.ShapeDtypeStruct((p1, 2, n1), jnp.float32),
+            jax.ShapeDtypeStruct((k2, k1), jnp.float32),
+            jax.ShapeDtypeStruct((p2, 2, n2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2, b_in.astype(x.dtype), sel_in.astype(x.dtype), core,
+      sel_out, b_out.astype(x.dtype), g2)
+    return dx[:b].reshape(*lead, n1), dwin, dcore, dwout
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _sandwich_diff(x, b_in, sel_in, core, sel_out, b_out, scale_in,
+                   scale_out, block_b, interpret):
+    return _sandwich_fwd_call(x, b_in, sel_in, core, sel_out, b_out,
+                              scale_in, scale_out, block_b, interpret)
+
+
+def _sandwich_diff_fwd(x, b_in, sel_in, core, sel_out, b_out, scale_in,
+                       scale_out, block_b, interpret):
+    out = _sandwich_fwd_call(x, b_in, sel_in, core, sel_out, b_out,
+                             scale_in, scale_out, block_b, interpret)
+    return out, (x, b_in, sel_in, core, sel_out, b_out)
+
+
+def _sandwich_diff_bwd(scale_in, scale_out, block_b, interpret, res, g):
+    x, b_in, sel_in, core, sel_out, b_out = res
+    dx, dwin, dcore, dwout = _sandwich_bwd_call(
+        x, b_in, sel_in, core, sel_out, b_out, g, scale_in, scale_out,
+        block_b, interpret)
+    # one-hot selection matrices are structural constants — zero cotangent
+    return (dx, dwin.astype(b_in.dtype), jnp.zeros_like(sel_in),
+            dcore.astype(core.dtype), jnp.zeros_like(sel_out),
+            dwout.astype(b_out.dtype))
+
+
+_sandwich_diff.defvjp(_sandwich_diff_fwd, _sandwich_diff_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("scale_in", "scale_out",
@@ -68,36 +235,9 @@ def sandwich_matmul(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
 
     ``b_in``: (p1, 2, n1); ``sel_in``: (n1, k1); ``core``: (k2, k1);
     ``sel_out``: (k2, n2); ``b_out``: (p2, 2, n2). n1/n2 powers of two.
+    Differentiable in ``x``, ``b_in``, ``core`` and ``b_out`` via a fused
+    Pallas backward kernel (custom_vjp); the one-hot selection matrices get
+    zero cotangents.
     """
-    p1, _, n1 = b_in.shape
-    p2, _, n2 = b_out.shape
-    k1 = sel_in.shape[1]
-    k2 = sel_out.shape[0]
-    assert core.shape == (k2, k1), (core.shape, k1, k2)
-    lead = x.shape[:-1]
-    b = int(np.prod(lead)) if lead else 1
-    x2 = x.reshape(b, n1)
-    bb = min(block_b, b)
-    padded_b = -(-b // bb) * bb
-    if padded_b != b:
-        x2 = jnp.pad(x2, ((0, padded_b - b), (0, 0)))
-    grid = (padded_b // bb,)
-    out = pl.pallas_call(
-        functools.partial(_sandwich_kernel, stages_in=num_stages(n1),
-                          stages_out=num_stages(n2),
-                          scale_in=scale_in, scale_out=scale_out),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, n1), lambda i: (i, 0)),
-            pl.BlockSpec((p1, 2, n1), lambda i: (0, 0, 0)),
-            pl.BlockSpec((n1, k1), lambda i: (0, 0)),
-            pl.BlockSpec((k2, k1), lambda i: (0, 0)),
-            pl.BlockSpec((k2, n2), lambda i: (0, 0)),
-            pl.BlockSpec((p2, 2, n2), lambda i: (0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bb, n2), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((padded_b, n2), x.dtype),
-        interpret=interpret,
-    )(x2, b_in.astype(x.dtype), sel_in.astype(x.dtype), core,
-      sel_out, b_out.astype(x.dtype))
-    return out[:b].reshape(*lead, n2)
+    return _sandwich_diff(x, b_in, sel_in, core, sel_out, b_out,
+                          scale_in, scale_out, block_b, interpret)

@@ -11,7 +11,21 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly Auto on every axis
+    AxisType = None
+
+
+def _mesh(shape: Tuple[int, ...], axes: Tuple[str, ...], devices) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types when the jax version has them
+    (older ``make_mesh`` signatures take no ``axis_types`` at all)."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, devices=devices,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -30,8 +44,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"visible; the dry-run entrypoint must set "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={ndev} before "
             f"importing jax")
-    return jax.make_mesh(shape, axes, devices=devices[:ndev],
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes, devices[:ndev])
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str],
@@ -39,8 +52,7 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str],
     """General mesh helper used by tests and the elastic re-mesh planner."""
     devices = list(devices if devices is not None else jax.devices())
     ndev = int(np.prod(shape))
-    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices[:ndev],
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(tuple(shape), tuple(axes), devices[:ndev])
 
 
 def single_device_mesh() -> Mesh:

@@ -213,12 +213,20 @@ class RooflineReport:
         return d
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions: newer jax returns a
+    flat dict, jax <= 0.4.x a one-element list of dicts."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def build_report(arch: str, shape: str, mesh_name: str, n_devices: int,
                  compiled, *, pod_boundary: int, model_flops: float,
                  params_total: int, params_active: int, tokens: int
                  ) -> RooflineReport:
     from repro.launch import hlo_analysis as ha
-    ca = compiled.cost_analysis()
     ma = compiled.memory_analysis()
     text = compiled.as_text()
     # loop-aware analysis: cost_analysis() counts while-loop bodies once

@@ -80,7 +80,8 @@ def linear_apply(cfg: ModelConfig, params: Dict, x: jnp.ndarray,
     bc = cfg.butterfly
     spec = site_butterfly_spec(bc.seed, site_key or site, n_in,
                                int(n_out), bc.k_factor, bc.use_bias)
-    return blayers.butterfly_linear_apply(spec, params, x)
+    return blayers.butterfly_linear_apply(spec, params, x,
+                                          backend=bc.backend)
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 PyTree = Any
 
+# jax >= 0.6 promotes shard_map to the top level and renames check_rep ->
+# check_vma; older jax keeps it in jax.experimental. Neither check is wanted
+# here (the output psum deliberately breaks per-shard replication tracking).
+if hasattr(jax, "shard_map"):
+    def _shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(f, *, mesh, in_specs, out_specs):
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
 
 def pipeline_apply(stage_fn: Callable[[PyTree, jnp.ndarray], jnp.ndarray],
                    stage_params: PyTree, x: jnp.ndarray, *, mesh: Mesh,
@@ -91,12 +105,11 @@ def pipeline_apply(stage_fn: Callable[[PyTree, jnp.ndarray], jnp.ndarray],
         return outputs
 
     pspec = jax.tree_util.tree_map(lambda _: P(stage_axis), stage_params)
-    out = jax.shard_map(
+    out = _shard_map(
         region, mesh=mesh,
         in_specs=(jax.tree_util.tree_map(lambda _: P(stage_axis),
                                          stage_params), P()),
         out_specs=P(),
-        check_vma=False,
     )(stage_params, mb)
     return out.reshape((B,) + x.shape[1:])
 

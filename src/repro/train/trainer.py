@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from dataclasses import replace as dc_replace
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -17,6 +18,7 @@ import numpy as np
 from repro.checkpoint.checkpointing import CheckpointManager
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data.pipeline import Prefetcher, SyntheticLM, for_model
+from repro.kernels import ops as kops
 from repro.models import lm
 from repro.optim import optimizer as opt
 from repro.runtime import pytree as pt
@@ -30,6 +32,9 @@ class TrainResult:
     losses: List[float]
     resumed_from: Optional[int]
     step_times: List[float] = field(default_factory=list)
+    # resolved butterfly kernel backend the step function traced with
+    # ("dense" when the model has no butterfly sites)
+    kernel_backend: str = "dense"
 
 
 class Trainer:
@@ -43,6 +48,21 @@ class Trainer:
         self.data = data or for_model(model_cfg, seq_len, global_batch,
                                       seed=train_cfg.seed)
         self.tx = steps_lib.make_optimizer(train_cfg)
+        # Resolve the butterfly kernel backend up front and freeze the
+        # concrete value into the config the step function traces with
+        # (otherwise "auto" would be re-resolved at trace time and could
+        # diverge from what TrainResult reports). The train step
+        # differentiates through the sandwich, and since the fused Pallas
+        # kernels carry custom_vjp backward passes the fused path is safe to
+        # trace under grad — "auto" keeps it on TPU end to end.
+        if model_cfg.butterfly is not None:
+            self.kernel_backend = kops.resolve_backend(
+                model_cfg.butterfly.backend)
+            model_cfg = model_cfg.with_(butterfly=dc_replace(
+                model_cfg.butterfly, backend=self.kernel_backend))
+            self.cfg = model_cfg
+        else:
+            self.kernel_backend = "dense"
         self.step_fn = jax.jit(steps_lib.make_train_step(
             model_cfg, self.tx, train_cfg.microbatches),
             donate_argnums=(0, 1))
@@ -120,4 +140,5 @@ class Trainer:
         self.opt_state = opt_state
         return TrainResult(steps_run=steps, losses=losses,
                            resumed_from=resumed_from,
-                           step_times=step_times)
+                           step_times=step_times,
+                           kernel_backend=self.kernel_backend)

@@ -1,0 +1,42 @@
+"""Decoration-time-safe hypothesis shim.
+
+CI installs ``hypothesis`` (a declared dev dependency) and runs the real
+property tests. The minimal container may not have it — importing it at
+module scope used to kill collection of every test in the file, so this shim
+substitutes stubs that merely mark the property tests as skipped while
+letting the rest of the module collect and run.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+
+            # keep the original name for test reports; do NOT functools.wraps
+            # (pytest would follow __wrapped__ and demand strategy args as
+            # fixtures)
+            stub.__name__ = f.__name__
+            stub.__doc__ = f.__doc__
+            return stub
+
+        return deco
