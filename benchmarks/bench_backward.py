@@ -1,11 +1,16 @@
-"""Fwd+bwd step time of the fused butterfly kernels vs the jnp oracle.
+"""Fwd+bwd step time of the fused kernels vs the jnp oracle.
 
 The paper's pitch is cheaper *training*, so this measures a full
 value-and-grad step (input and weight cotangents) through
-``butterfly_apply`` and ``sandwich_apply`` across n. The fused Pallas path
-compiles only on TPU (Mosaic); on CPU those rows are emitted as skipped —
-interpret-mode timings are Python-loop artifacts, not kernel performance —
-while the jnp-oracle rows still track the unfused baseline per platform.
+``butterfly_apply``, ``sandwich_apply`` and ``flash_attention`` at
+n ∈ {1024, 4096, 8192} under the :mod:`repro.kernels.tuning` autotuned
+block sizes (recorded in each row's ``derived`` field). The fused Pallas
+path compiles only on TPU (Mosaic); on CPU those rows are emitted as
+skipped (``us_per_call: null`` + ``"skipped": true`` — interpret-mode
+timings are Python-loop artifacts, not kernel performance) while the
+jnp-oracle rows still track the unfused baseline per platform. The flash
+jnp oracle materializes the O(S²) score matrix, so its S = 8192 row is
+also skipped on CPU hosts.
 """
 
 from __future__ import annotations
@@ -15,53 +20,59 @@ import math
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, emit_skipped, time_fn
 from repro.core import butterfly as bf
 from repro.core import layers as bl
-from repro.kernels import ops
+from repro.kernels import ops, ref, tuning
+from repro.kernels.flash import flash_attention
 from repro.kernels.sandwich import one_hot_select
 
-NS = (1024, 2048, 4096, 8192, 16384)
+NS = (1024, 4096, 8192)
+FLASH_HEADS = 2
+FLASH_DIM = 64
+
+NO_TPU = "no_tpu_interpret_timing_meaningless"
 
 
-def _butterfly_step(backend, w_shape_c):
-    c = w_shape_c
+def _tuned(kernel: str, n: int) -> str:
+    c = tuning.tune(kernel, n, "float32", "bwd")
+    return f"block_b={c.block_b};segment={c.segment}"
 
+
+def _butterfly_step(backend, c):
     def loss(x, w):
         return jnp.vdot(c, ops.butterfly_apply(x, w, backend=backend))
 
     return jax.jit(jax.grad(loss, argnums=(0, 1)))
 
 
-def run(ns=NS, batch: int = 64) -> None:
-    on_tpu = jax.default_backend() == "tpu"
-    for n in ns:
-        w = bf.random_weights(jax.random.PRNGKey(0), n)
-        x = jax.random.normal(jax.random.PRNGKey(1), (batch, n))
-        c = jax.random.normal(jax.random.PRNGKey(2), (batch, n))
-        t_jnp = time_fn(_butterfly_step("jnp", c), x, w)
-        emit(f"backward/butterfly_fwdbwd_jnp_n{n}", t_jnp, f"batch={batch}")
-        if on_tpu:
-            t_fused = time_fn(_butterfly_step("pallas", c), x, w)
-            emit(f"backward/butterfly_fwdbwd_fused_n{n}", t_fused,
-                 f"batch={batch};speedup_vs_jnp={t_jnp / t_fused:.2f}x")
-        else:
-            emit(f"backward/butterfly_fwdbwd_fused_n{n}", 0.00,
-                 "status=skipped;reason=no_tpu_interpret_timing_meaningless")
+def _bench_butterfly(n: int, batch: int, iters: int, on_tpu: bool) -> None:
+    w = bf.random_weights(jax.random.PRNGKey(0), n)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, n))
+    c = jax.random.normal(jax.random.PRNGKey(2), (batch, n))
+    t_jnp = time_fn(_butterfly_step("jnp", c), x, w, iters=iters)
+    emit(f"backward/butterfly_fwdbwd_jnp_n{n}", t_jnp, f"batch={batch}")
+    name = f"backward/butterfly_fwdbwd_fused_n{n}"
+    if on_tpu:
+        t_fused = time_fn(_butterfly_step("pallas", c), x, w, iters=iters)
+        emit(name, t_fused, f"batch={batch};{_tuned('butterfly', n)};"
+             f"speedup_vs_jnp={t_jnp / t_fused:.2f}x")
+    else:
+        emit_skipped(name, NO_TPU, _tuned("butterfly", n))
 
-    # one sandwich shape: the full dense-layer replacement, fwd+bwd
-    n1 = n2 = ns[0]
-    k1 = k2 = max(2, int(math.log2(n1)))
-    spec = bl.make_spec(jax.random.PRNGKey(3), n1, n2, k_in=k1, k_out=k2,
+
+def _bench_sandwich(n: int, batch: int, iters: int, on_tpu: bool) -> None:
+    k = max(2, int(math.log2(n)))
+    spec = bl.make_spec(jax.random.PRNGKey(3), n, n, k_in=k, k_out=k,
                         use_bias=False)
     params = bl.init_butterfly_linear(jax.random.PRNGKey(4), spec)
-    x = jax.random.normal(jax.random.PRNGKey(5), (batch, n1))
-    c = jax.random.normal(jax.random.PRNGKey(6), (batch, n2))
-    sel_in = one_hot_select(spec.idx_in, n1)
-    sel_out = one_hot_select(spec.idx_out, n2).T
-    si, so = math.sqrt(n1 / k1), math.sqrt(n2 / k2)
+    x = jax.random.normal(jax.random.PRNGKey(5), (batch, n))
+    c = jax.random.normal(jax.random.PRNGKey(6), (batch, n))
+    sel_in = one_hot_select(spec.idx_in, n)
+    sel_out = one_hot_select(spec.idx_out, n).T
+    si = so = math.sqrt(n / k)
 
-    def sandwich_step(backend):
+    def step(backend):
         def loss(x, b_in, core, b_out):
             return jnp.vdot(c, ops.sandwich_apply(
                 x, b_in, sel_in, core, sel_out, b_out,
@@ -70,16 +81,59 @@ def run(ns=NS, batch: int = 64) -> None:
         fn = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))
         return lambda: fn(x, params["b_in"], params["core"], params["b_out"])
 
-    t_jnp = time_fn(sandwich_step("jnp"))
-    emit(f"backward/sandwich_fwdbwd_jnp_n{n1}", t_jnp,
-         f"batch={batch};k={k1}")
+    t_jnp = time_fn(step("jnp"), iters=iters)
+    emit(f"backward/sandwich_fwdbwd_jnp_n{n}", t_jnp,
+         f"batch={batch};k={k}")
+    name = f"backward/sandwich_fwdbwd_fused_n{n}"
     if on_tpu:
-        t_fused = time_fn(sandwich_step("pallas"))
-        emit(f"backward/sandwich_fwdbwd_fused_n{n1}", t_fused,
-             f"batch={batch};k={k1};speedup_vs_jnp={t_jnp / t_fused:.2f}x")
+        t_fused = time_fn(step("pallas"), iters=iters)
+        emit(name, t_fused, f"batch={batch};k={k};{_tuned('sandwich', n)};"
+             f"speedup_vs_jnp={t_jnp / t_fused:.2f}x")
     else:
-        emit(f"backward/sandwich_fwdbwd_fused_n{n1}", 0.00,
-             "status=skipped;reason=no_tpu_interpret_timing_meaningless")
+        emit_skipped(name, NO_TPU, _tuned("sandwich", n))
+
+
+def _bench_flash(seq: int, iters: int, on_tpu: bool) -> None:
+    B, H, D = 1, FLASH_HEADS, FLASH_DIM
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (B, H, seq, D))
+    k = jax.random.normal(ks[1], (B, H, seq, D))
+    v = jax.random.normal(ks[2], (B, H, seq, D))
+    c = jax.random.normal(ks[3], (B, H, seq, D))
+    bq, bkv = tuning.flash_blocks(seq, D, "float32", "bwd")
+    tuned = f"block_q={bq};block_kv={bkv}"
+
+    jnp_name = f"backward/flash_fwdbwd_jnp_n{seq}"
+    if on_tpu or seq <= 4096:
+        def jnp_loss(q, k, v):
+            return jnp.vdot(c, ref.flash_attention_ref(q, k, v, causal=True))
+
+        t_jnp = time_fn(jax.jit(jax.grad(jnp_loss, argnums=(0, 1, 2))),
+                        q, k, v, iters=iters)
+        emit(jnp_name, t_jnp, f"heads={H};head_dim={D}")
+    else:
+        emit_skipped(jnp_name, "cpu_quadratic_oracle_guard",
+                     f"heads={H};head_dim={D}")
+
+    name = f"backward/flash_fwdbwd_fused_n{seq}"
+    if on_tpu:
+        def fused_loss(q, k, v):
+            return jnp.vdot(c, flash_attention(q, k, v, causal=True))
+
+        t_fused = time_fn(jax.jit(jax.grad(fused_loss, argnums=(0, 1, 2))),
+                          q, k, v, iters=iters)
+        emit(name, t_fused, f"heads={H};head_dim={D};{tuned}")
+    else:
+        emit_skipped(name, NO_TPU, tuned)
+
+
+def run(ns=NS, batch: int = 64, iters=None) -> None:
+    on_tpu = jax.default_backend() == "tpu"
+    for n in ns:
+        it = iters if iters is not None else (20 if n <= 2048 else 5)
+        _bench_butterfly(n, batch, it, on_tpu)
+        _bench_sandwich(n, batch, it, on_tpu)
+        _bench_flash(n, it, on_tpu)
 
 
 if __name__ == "__main__":

@@ -28,10 +28,29 @@ def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
     return float(np.median(times))
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def emit(name: str, us_per_call, derived: str = "") -> None:
+    """Record one benchmark row (CSV line + BENCH_*.json entry).
+
+    ``us_per_call=None`` marks a row whose timing was *not measured* (e.g.
+    fused-kernel rows on CPU where interpret-mode timing is meaningless):
+    the JSON gets ``"us_per_call": null`` plus ``"skipped": true`` and the
+    CSV cell stays empty, so the perf trajectory and the CI regression diff
+    are never polluted by fake zeros.
+    """
+    if us_per_call is None:
+        ROWS.append({"name": name, "us_per_call": None, "skipped": True,
+                     "derived": derived})
+        print(f"{name},,{derived}")
+        return
     ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 2),
                  "derived": derived})
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def emit_skipped(name: str, reason: str, derived: str = "") -> None:
+    """Emit a skipped row (no timing) with a machine-readable reason."""
+    extra = f"status=skipped;reason={reason}"
+    emit(name, None, f"{extra};{derived}" if derived else extra)
 
 
 def gaussian_lowrank(n: int, d: int, rank: int, seed: int = 0,

@@ -1,0 +1,117 @@
+"""Benchmark regression gate: diff a fresh BENCH_*.json against a baseline.
+
+Usage::
+
+    python benchmarks/diff.py BASELINE.json FRESH.json [--threshold 0.25]
+                              [--min-us 5000]
+
+Compares ``us_per_call`` of rows present in both files and exits non-zero
+when any comparable row regressed by more than ``--threshold`` (fractional;
+0.25 = 25% slower than baseline). Rows are *not* comparable — and therefore
+never gate — when either side is skipped (``"skipped": true`` /
+``us_per_call`` null), is a metric-only row (``us_per_call`` 0), or is
+faster than ``--min-us`` in the baseline (sub-threshold timings on shared
+CI runners are noise, not signal).
+
+Because the committed baseline and the CI runner are different machines,
+ratios are normalized by the median ratio across all comparable rows before
+gating (disable with ``--no-normalize``): a uniformly slower host shifts
+every row equally and gates nothing, while a genuine kernel regression
+stands out against the rest of the suite. Known trade-off: a regression
+hitting the *majority* of timed rows moves the median itself and is
+absorbed — the gate catches localized regressions, the uploaded
+``BENCH_*.json`` artifacts remain the record for across-the-board drifts.
+Normalization needs a population to estimate machine speed from, so with
+fewer than ``--min-rows`` comparable pairs raw ratios gate instead.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def comparable(row: dict, min_us: float) -> bool:
+    if row is None or row.get("skipped"):
+        return False
+    us = row.get("us_per_call")
+    # us == 0.0 marks a metric-only row (derived numbers, no timing): it
+    # must neither gate nor enter the median-normalization population
+    return us is not None and us > 0 and us >= min_us
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional regression (default 0.25)")
+    ap.add_argument("--min-us", type=float, default=5000.0,
+                    help="ignore baseline rows faster than this (noise)")
+    ap.add_argument("--no-normalize", action="store_true",
+                    help="gate on raw ratios (same-machine comparisons)")
+    ap.add_argument("--min-rows", type=int, default=5,
+                    help="min comparable pairs for median normalization; "
+                         "below this, raw ratios gate")
+    args = ap.parse_args(argv)
+
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+
+    pairs = []
+    for name, brow in sorted(base.items()):
+        frow = fresh.get(name)
+        if not (comparable(brow, args.min_us) and comparable(frow, 0.0)):
+            continue
+        pairs.append((name, brow["us_per_call"], frow["us_per_call"],
+                      frow["us_per_call"] / brow["us_per_call"]))
+
+    speed = 1.0
+    if len(pairs) >= args.min_rows and not args.no_normalize:
+        ratios = sorted(r for _, _, _, r in pairs)
+        speed = ratios[len(ratios) // 2]
+        print(f"# machine-speed factor (median ratio): {speed:.2f}x")
+    elif pairs and not args.no_normalize:
+        print(f"# only {len(pairs)} comparable pair(s) < --min-rows "
+              f"{args.min_rows}: gating on raw ratios")
+
+    regressions = []
+    compared = len(pairs)
+    for name, b_us, f_us, ratio in pairs:
+        norm = ratio / speed
+        marker = ""
+        if norm > 1.0 + args.threshold:
+            marker = "  << REGRESSION"
+            regressions.append((name, b_us, f_us, norm))
+        print(f"{name}: {b_us:.0f}us -> {f_us:.0f}us "
+              f"({ratio:.2f}x raw, {norm:.2f}x normalized){marker}")
+
+    # A timed baseline row that vanished from the fresh run — or came back
+    # skipped/untimed — is a gate bypass, not a warning: a renamed/dropped
+    # benchmark, a crash before its emit, or a widened skip guard would
+    # otherwise let any regression through green.
+    missing = [n for n, r in base.items()
+               if comparable(r, args.min_us)
+               and not comparable(fresh.get(n), 0.0)]
+
+    print(f"# compared {compared} rows, {len(regressions)} regression(s), "
+          f"{len(missing)} missing, threshold {args.threshold:.0%}, "
+          f"floor {args.min_us:.0f}us")
+    for name, b, f, r in regressions:
+        print(f"FAIL {name}: {b:.0f}us -> {f:.0f}us ({r:.2f}x)",
+              file=sys.stderr)
+    for n in missing:
+        print(f"FAIL timed baseline row {n!r} missing or skipped in "
+              f"fresh run", file=sys.stderr)
+    return 1 if regressions or missing else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

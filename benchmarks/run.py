@@ -67,8 +67,8 @@ def main() -> None:
     bench_theorem1.run()
     bench_kernels.run()
     bench_speed.run()
-    bench_backward.run(ns=(1024, 2048) if fast else bench_backward.NS,
-                       batch=16 if fast else 64)
+    bench_backward.run(ns=bench_backward.NS, batch=16 if fast else 64,
+                       iters=5 if fast else None)
     bench_nonlinear.run(steps=120 if fast else 300)
     if fast:
         bench_autoencoder.run(train_steps=60)

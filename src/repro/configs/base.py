@@ -24,6 +24,9 @@ class ButterflyConfig:
     ``backend``: kernel path for the sandwich ("auto" | "jnp" | "pallas" |
     "pallas_interpret"); "auto" picks the fused Pallas kernels on TPU — for
     training too, now that they carry custom_vjp backward kernels.
+    ``block_b``/``segment``: Pallas batch-tile rows and backward checkpoint
+    segment; ``None`` (default) defers to the ``repro.kernels.tuning``
+    VMEM/roofline autotuner instead of a magic constant.
     """
 
     sites: Tuple[str, ...] = ("lm_head",)
@@ -31,6 +34,8 @@ class ButterflyConfig:
     seed: int = 0
     use_bias: bool = False
     backend: str = "auto"
+    block_b: Optional[int] = None
+    segment: Optional[int] = None
 
 
 @dataclass(frozen=True)

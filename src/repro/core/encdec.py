@@ -68,31 +68,42 @@ def init_params(key: jax.Array, spec: EncDecSpec) -> Dict[str, jnp.ndarray]:
 
 
 def apply_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray, *,
-            backend: kops.Backend = "auto") -> jnp.ndarray:
+            backend: kops.Backend = "auto",
+            block_b: Optional[int] = None,
+            segment: Optional[int] = None) -> jnp.ndarray:
     """``B X`` for column-data ``X (n×d)`` -> (ℓ×d).
 
     The butterfly product dispatches through :mod:`repro.kernels.ops`; the
     fused Pallas path is differentiable (custom_vjp), so training through
     ``apply_B`` keeps the single-HBM-round-trip kernel in both directions.
+    ``block_b``/``segment`` default to the :mod:`repro.kernels.tuning`
+    autotuner.
     """
     Xp = X
     if spec.pad_n != spec.n:
         Xp = jnp.pad(X, ((0, spec.pad_n - spec.n), (0, 0)))
-    H = kops.butterfly_apply(Xp.T, w, backend=backend)  # (d, pad_n)
+    H = kops.butterfly_apply(Xp.T, w, backend=backend, block_b=block_b,
+                             segment=segment)          # (d, pad_n)
     Ht = bf.truncate(H, spec.trunc_idx, spec.pad_n, spec.jl_scale)
     return Ht.T                                        # (ℓ, d)
 
 
 def forward(spec: EncDecSpec, params: Dict, X: jnp.ndarray, *,
-            backend: kops.Backend = "auto") -> jnp.ndarray:
-    Xt = apply_B(spec, params["B"], X, backend=backend)
+            backend: kops.Backend = "auto",
+            block_b: Optional[int] = None,
+            segment: Optional[int] = None) -> jnp.ndarray:
+    Xt = apply_B(spec, params["B"], X, backend=backend, block_b=block_b,
+                 segment=segment)
     return params["D"] @ (params["E"] @ Xt)
 
 
 def loss_fn(spec: EncDecSpec, params: Dict, X: jnp.ndarray,
             Y: jnp.ndarray, *,
-            backend: kops.Backend = "auto") -> jnp.ndarray:
-    Yb = forward(spec, params, X, backend=backend)
+            backend: kops.Backend = "auto",
+            block_b: Optional[int] = None,
+            segment: Optional[int] = None) -> jnp.ndarray:
+    Yb = forward(spec, params, X, backend=backend, block_b=block_b,
+                 segment=segment)
     return jnp.sum(jnp.square(Yb - Y))
 
 
@@ -178,19 +189,22 @@ def fjlt_pca_loss(key: jax.Array, X: jnp.ndarray, k: int, ell: int
 def train(spec: EncDecSpec, params: Dict, X: jnp.ndarray, Y: jnp.ndarray,
           steps: int, lr: float = 1e-3, train_B: bool = True,
           log_every: int = 0,
-          backend: kops.Backend = "auto") -> Tuple[Dict, list]:
+          backend: kops.Backend = "auto",
+          block_b: Optional[int] = None,
+          segment: Optional[int] = None) -> Tuple[Dict, list]:
     """Full-batch Adam on the reconstruction loss.
 
     ``train_B=False`` freezes the butterfly (phase 1 of two-phase learning).
     ``backend`` selects the butterfly kernel path — on TPU the fused Pallas
-    kernel runs in the gradient too (custom_vjp). Returns (params, loss
-    history).
+    kernel runs in the gradient too (custom_vjp); ``block_b``/``segment``
+    tune its tiles (``None`` = autotuned). Returns (params, loss history).
     """
     tx = opt.adamw(lr)
     state = tx.init(params)
 
     def masked_loss(p):
-        return loss_fn(spec, p, X, Y, backend=backend)
+        return loss_fn(spec, p, X, Y, backend=backend, block_b=block_b,
+                       segment=segment)
 
     @jax.jit
     def step(params, state):

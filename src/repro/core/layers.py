@@ -136,21 +136,28 @@ def _selection_matrices(spec: ButterflySpec):
 
     Cached per spec (hashable, truncation indices are frozen at init) so the
     matrices become jit-time constants instead of being rebuilt per call.
+    Cached as *numpy* — this function runs inside jit traces, and caching a
+    trace-created jax array would leak a tracer into later traces.
     """
-    sel_in = kops.one_hot_select(spec.idx_in, spec.pad_in)
-    sel_out = kops.one_hot_select(spec.idx_out, spec.pad_out).T
+    from repro.kernels.sandwich import one_hot_select_np
+    sel_in = one_hot_select_np(spec.idx_in, spec.pad_in)
+    sel_out = one_hot_select_np(spec.idx_out, spec.pad_out).T
     return sel_in, sel_out
 
 
 def butterfly_linear_apply(spec: ButterflySpec, params: dict,
                            x: jnp.ndarray, *,
-                           backend: kops.Backend = "auto") -> jnp.ndarray:
+                           backend: kops.Backend = "auto",
+                           block_b: Optional[int] = None,
+                           segment: Optional[int] = None) -> jnp.ndarray:
     """Apply the sandwich along the last axis: (..., n_in) -> (..., n_out).
 
     ``backend`` selects the kernel path (see :mod:`repro.kernels.ops`):
     ``jnp`` runs the unfused reference ops below; ``pallas`` runs the fused
     sandwich kernel — differentiable in both activations and weights via its
-    custom_vjp — and ``auto`` picks per platform.
+    custom_vjp — and ``auto`` picks per platform. ``block_b``/``segment``
+    (Pallas tile rows and backward checkpoint interval) default to the
+    :mod:`repro.kernels.tuning` autotuner.
     """
     if x.shape[-1] != spec.n_in:
         raise ValueError(f"expected last dim {spec.n_in}, got {x.shape[-1]}")
@@ -175,7 +182,8 @@ def butterfly_linear_apply(spec: ButterflySpec, params: dict,
         z = kops.sandwich_apply(x, params["b_in"], sel_in, params["core"],
                                 sel_out, params["b_out"],
                                 scale_in=scale_in, scale_out=scale_out,
-                                backend=resolved)
+                                backend=resolved, block_b=block_b,
+                                segment=segment)
     if spec.pad_out != spec.n_out:
         z = z[..., : spec.n_out]
     if spec.use_bias and "bias" in params:

@@ -19,28 +19,53 @@ reductions::
     da_s = Σ_batch g_{s+1} ⊙ x_s        db_s = Σ_batch g_{s+1} ⊙ swap_s(x_s)
     g_s  = a_s ⊙ g_{s+1} + swap_s(b_s ⊙ g_{s+1})
 
-Per-stage activations ``x_s`` are *recomputed* stage-by-stage from the saved
-input tile rather than stashed (O(n log² n) extra VPU flops against O(n log n)
-extra VMEM — the tile stays resident either way, and VMEM is the scarce
-resource). Weight gradients are accumulated in float32 across the batch grid:
-the TPU grid is sequential, so the ``(p, 2, n)`` output block is revisited by
-every grid step and updated in place.
+**Segmented stage checkpointing.** The reverse sweep needs the stage inputs
+``x_s`` in *reverse* order. Recomputing each from the saved input tile costs
+O(p²) stage applications per tile (p = log2 n — 13× more VPU work than the
+forward at n = 8192). Instead, one forward sweep stashes the activation at
+every ``segment``-th stage boundary in a VMEM scratch buffer
+(``pl.pallas_call`` ``scratch_shapes``), and the reverse sweep recomputes
+only *within* a segment (one pass per segment, held as live VMEM values):
 
-VMEM budget: ``block_b · n · 4`` bytes for the tile plus ``2 · n · log n · 4``
-for the weights; default ``block_b = 256`` keeps n = 8192 under 12 MB.
+    stage applications per tile  ≤  p (checkpoint sweep)
+                                  + p (within-segment recompute)
+                                  + p (dual cotangent sweep)   = O(p)
+
+against ``⌈p/segment⌉ + segment + 3`` live ``(block_b, n)`` tiles of VMEM —
+``segment`` is the VMEM/compute knob, defaulting to ⌈√p⌉ (the live-tile
+minimum) via :mod:`repro.kernels.tuning`, which also sizes ``block_b`` so
+the whole working set fits the VMEM budget. Weight gradients are accumulated
+in float32 across the batch grid: the TPU grid is sequential, so the
+``(p, 2, n)`` output block is revisited by every grid step and updated in
+place.
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.butterfly import num_stages
+from repro.kernels import tuning
 
-DEFAULT_BLOCK_B = 256
+# Trace-time instrumentation: the stage loops fully unroll, so the number of
+# _stage_apply invocations while building a kernel body *is* the per-tile
+# stage-application count. count_stage_applies() gates the O(p·√p) bound in
+# tests/CI instead of eyeballing it.
+_STAGE_APPLY_CALLS = [0]
+
+
+@contextlib.contextmanager
+def count_stage_applies():
+    """Yields a zero-arg callable returning the number of butterfly stage
+    applications issued since entering the context."""
+    start = _STAGE_APPLY_CALLS[0]
+    yield lambda: _STAGE_APPLY_CALLS[0] - start
 
 
 def _swap_halves(x: jnp.ndarray, stride: int) -> jnp.ndarray:
@@ -57,6 +82,7 @@ def _stage_apply(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
                  stride: int, transpose: bool) -> jnp.ndarray:
     """One butterfly stage: ``a ⊙ x + b ⊙ swap(x)`` or its transpose
     ``a ⊙ x + swap(b ⊙ x)``."""
+    _STAGE_APPLY_CALLS[0] += 1
     if transpose:
         return a * x + _swap_halves(b * x, stride)
     return a * x + b * _swap_halves(x, stride)
@@ -75,46 +101,75 @@ def _butterfly_kernel(x_ref, w_ref, o_ref, *, stages: int, transpose: bool):
 
 
 def _butterfly_bwd_block(x: jnp.ndarray, w_ref, g: jnp.ndarray, stages: int,
-                         transpose: bool):
+                         transpose: bool, segment: int = 0, ckpt_ref=None):
     """VJP of the fused butterfly on one ``(bb, n)`` tile.
 
     Returns ``(dx, dw)`` where ``dw`` is ``(p, 2, n)`` float32, summed over
-    the tile's batch rows. Stage inputs are recomputed from ``x`` by applying
-    the stage prefix, so only two ``(bb, n)`` tiles are ever live.
+    the tile's batch rows. Stage inputs come from segmented checkpointing:
+    a forward sweep stores the activation entering stage ``j`` for every
+    segment boundary ``j ∈ {0, segment, 2·segment, …}`` (into ``ckpt_ref``
+    when a VMEM scratch ref is supplied, else as live values), then each
+    segment is recomputed exactly once during the reverse sweep — O(p) stage
+    applications total instead of the O(p²) full-prefix recompute.
 
     The cotangent rule per stage is the *dual* stage applied to ``g``: the
     transpose of ``a ⊙ x + b ⊙ swap(x)`` is ``a ⊙ g + swap(b ⊙ g)`` and vice
     versa (swap is an involution).
     """
     order = _stage_order(stages, transpose)
+    seg = tuning.resolve_segment(stages, segment or None)
+    bounds = list(range(0, stages, seg))
+
+    # --- forward sweep: checkpoint the input of stage order[j] at every
+    # segment boundary j (x itself is the first checkpoint) ---
+    ckpts = {}
+    t = x
+    for ci, j0 in enumerate(bounds):
+        if ckpt_ref is None:
+            ckpts[ci] = t
+        else:
+            ckpt_ref[ci] = t
+        if ci + 1 < len(bounds):
+            for j in range(j0, bounds[ci + 1]):
+                s = order[j]
+                t = _stage_apply(t, w_ref[s, 0, :], w_ref[s, 1, :], 1 << s,
+                                 transpose)
+
+    # --- reverse sweep: one within-segment recompute per segment ---
     da = [None] * stages
     db = [None] * stages
-    for j in reversed(range(stages)):
-        s = order[j]
-        a = w_ref[s, 0, :]
-        b = w_ref[s, 1, :]
-        t = x
-        for ss in order[:j]:
-            t = _stage_apply(t, w_ref[ss, 0, :], w_ref[ss, 1, :], 1 << ss,
-                             transpose)
-        gf = g.astype(jnp.float32)
-        tf = t.astype(jnp.float32)
-        if transpose:
-            # y[i] = a[i]·t[i] + b[i^s]·t[i^s]  =>  ∂y/∂b[i] hits g[i^s]
-            da[s] = jnp.sum(gf * tf, axis=0)
-            db[s] = jnp.sum(_swap_halves(gf, 1 << s) * tf, axis=0)
-        else:
-            da[s] = jnp.sum(gf * tf, axis=0)
-            db[s] = jnp.sum(gf * _swap_halves(tf, 1 << s), axis=0)
-        g = _stage_apply(g, a, b, 1 << s, not transpose)
+    for ci in reversed(range(len(bounds))):
+        j0 = bounds[ci]
+        j1 = min(j0 + seg, stages)
+        t = ckpts[ci] if ckpt_ref is None else ckpt_ref[ci]
+        acts = [t]
+        for j in range(j0, j1 - 1):
+            s = order[j]
+            acts.append(_stage_apply(acts[-1], w_ref[s, 0, :],
+                                     w_ref[s, 1, :], 1 << s, transpose))
+        for j in reversed(range(j0, j1)):
+            s = order[j]
+            a = w_ref[s, 0, :]
+            b = w_ref[s, 1, :]
+            gf = g.astype(jnp.float32)
+            tf = acts[j - j0].astype(jnp.float32)
+            if transpose:
+                # y[i] = a[i]·t[i] + b[i^s]·t[i^s]  =>  ∂y/∂b[i] hits g[i^s]
+                da[s] = jnp.sum(gf * tf, axis=0)
+                db[s] = jnp.sum(_swap_halves(gf, 1 << s) * tf, axis=0)
+            else:
+                da[s] = jnp.sum(gf * tf, axis=0)
+                db[s] = jnp.sum(gf * _swap_halves(tf, 1 << s), axis=0)
+            g = _stage_apply(g, a, b, 1 << s, not transpose)
     dw = jnp.stack([jnp.stack(da), jnp.stack(db)], axis=1)  # (p, 2, n) f32
     return g, dw
 
 
-def _butterfly_bwd_kernel(x_ref, w_ref, g_ref, dx_ref, dw_ref, *,
-                          stages: int, transpose: bool):
+def _butterfly_bwd_kernel(x_ref, w_ref, g_ref, dx_ref, dw_ref, ckpt_ref, *,
+                          stages: int, transpose: bool, segment: int):
     dx, dw = _butterfly_bwd_block(x_ref[...], w_ref, g_ref[...], stages,
-                                  transpose)
+                                  transpose, segment=segment,
+                                  ckpt_ref=ckpt_ref)
     dx_ref[...] = dx.astype(dx_ref.dtype)
 
     @pl.when(pl.program_id(0) == 0)
@@ -142,10 +197,11 @@ def _flatten_batch(x: jnp.ndarray, block_b: int):
 
 
 def _butterfly_fwd_call(x: jnp.ndarray, w: jnp.ndarray, transpose: bool,
-                        block_b: int, interpret: bool) -> jnp.ndarray:
+                        block_b, interpret: bool) -> jnp.ndarray:
     p, two, n = w.shape
     assert two == 2 and (1 << p) == n, f"bad weight shape {w.shape}"
     stages = num_stages(n)
+    block_b = tuning.resolve_block_b("butterfly", n, x.dtype, "fwd", block_b)
     x2, lead, b, bb, padded_b = _flatten_batch(x, block_b)
     grid = (padded_b // bb,)
     out = pl.pallas_call(
@@ -164,15 +220,19 @@ def _butterfly_fwd_call(x: jnp.ndarray, w: jnp.ndarray, transpose: bool,
 
 
 def _butterfly_bwd_call(x: jnp.ndarray, w: jnp.ndarray, g: jnp.ndarray,
-                        transpose: bool, block_b: int, interpret: bool):
+                        transpose: bool, block_b, segment, interpret: bool):
     p, _, n = w.shape
     stages = num_stages(n)
+    block_b = tuning.resolve_block_b("butterfly", n, x.dtype, "bwd", block_b)
+    seg = tuning.resolve_segment(stages, segment, kernel="butterfly", n=n,
+                                 dtype=x.dtype)
     x2, lead, b, bb, padded_b = _flatten_batch(x, block_b)
     g2, _, _, _, _ = _flatten_batch(g.astype(x.dtype), block_b)
     grid = (padded_b // bb,)
+    n_ckpt = len(range(0, stages, seg))
     dx, dw = pl.pallas_call(
         functools.partial(_butterfly_bwd_kernel, stages=stages,
-                          transpose=transpose),
+                          transpose=transpose, segment=seg),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, n), lambda i: (i, 0)),
@@ -187,25 +247,28 @@ def _butterfly_bwd_call(x: jnp.ndarray, w: jnp.ndarray, g: jnp.ndarray,
             jax.ShapeDtypeStruct((padded_b, n), x.dtype),
             jax.ShapeDtypeStruct((p, 2, n), jnp.float32),
         ],
+        scratch_shapes=[pltpu.VMEM((n_ckpt, bb, n), x2.dtype)],
         interpret=interpret,
     )(x2, w.astype(x.dtype), g2)
     return dx[:b].reshape(*lead, n), dw
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _butterfly_diff(x, w, transpose, block_b, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _butterfly_diff(x, w, transpose, block_b, segment, interpret):
     return _butterfly_fwd_call(x, w, transpose, block_b, interpret)
 
 
-def _butterfly_diff_fwd(x, w, transpose, block_b, interpret):
+def _butterfly_diff_fwd(x, w, transpose, block_b, segment, interpret):
     # Residuals are just (x, w): the backward kernel recomputes stage
-    # activations from the input tile, so nothing else is stashed in HBM.
+    # activations from the input tile via segmented checkpointing, so
+    # nothing else is stashed in HBM.
     return _butterfly_fwd_call(x, w, transpose, block_b, interpret), (x, w)
 
 
-def _butterfly_diff_bwd(transpose, block_b, interpret, res, g):
+def _butterfly_diff_bwd(transpose, block_b, segment, interpret, res, g):
     x, w = res
-    dx, dw = _butterfly_bwd_call(x, w, g, transpose, block_b, interpret)
+    dx, dw = _butterfly_bwd_call(x, w, g, transpose, block_b, segment,
+                                 interpret)
     return dx, dw.astype(w.dtype)
 
 
@@ -213,15 +276,19 @@ _butterfly_diff.defvjp(_butterfly_diff_fwd, _butterfly_diff_bwd)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("transpose", "block_b", "interpret"))
+                   static_argnames=("transpose", "block_b", "segment",
+                                    "interpret"))
 def butterfly_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
                      transpose: bool = False,
-                     block_b: int = DEFAULT_BLOCK_B,
+                     block_b=None, segment=None,
                      interpret: bool = False) -> jnp.ndarray:
     """Fused butterfly product ``B x`` (or ``Bᵀ x``) over the last axis.
 
     ``x``: (..., n) with n a power of two; ``w``: (p, 2, n).
     Leading axes are flattened into a batch grid. Differentiable in both
-    ``x`` and ``w`` via a fused Pallas backward kernel (custom_vjp).
+    ``x`` and ``w`` via a fused Pallas backward kernel (custom_vjp) with
+    segmented stage checkpointing. ``block_b`` (batch-tile rows, per
+    direction) and ``segment`` (backward checkpoint interval) default to the
+    :mod:`repro.kernels.tuning` autotuner; pass ints only to override it.
     """
-    return _butterfly_diff(x, w, transpose, block_b, interpret)
+    return _butterfly_diff(x, w, transpose, block_b, segment, interpret)

@@ -14,12 +14,18 @@ Backend selection (``auto`` | ``jnp`` | ``pallas`` | ``pallas_interpret``):
 * ``REPRO_KERNEL_BACKEND`` in the environment overrides what ``auto``
   resolves to (read at trace time), e.g. to force the oracle path on TPU
   when bisecting a kernel bug.
+
+Block sizes: the Pallas entry points take optional ``block_b`` (batch-tile
+rows) and ``segment`` (backward checkpoint interval) knobs. ``None`` — the
+default everywhere — defers to the :mod:`repro.kernels.tuning` VMEM/roofline
+autotuner, so callers never pass magic numbers; explicit ints override it
+(as do the ``REPRO_TUNE_*`` env vars, see ``tuning.py``).
 """
 
 from __future__ import annotations
 
 import os
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,28 +60,35 @@ def resolve_backend(backend: Backend = "auto") -> str:
 
 def butterfly_apply(x: jnp.ndarray, w: jnp.ndarray, *,
                     transpose: bool = False,
-                    backend: Backend = "auto") -> jnp.ndarray:
+                    backend: Backend = "auto",
+                    block_b: Optional[int] = None,
+                    segment: Optional[int] = None) -> jnp.ndarray:
     """Fused butterfly product over the last axis of ``x``.
 
     Differentiable under every backend; the Pallas backends use the fused
-    custom_vjp backward kernel.
+    custom_vjp backward kernel with segmented stage checkpointing.
+    ``block_b``/``segment`` default to the autotuner (``tuning.py``).
     """
     backend = resolve_backend(backend)
     if backend == "jnp":
         return _ref.butterfly_ref(w.astype(x.dtype), x, transpose=transpose)
     interpret = backend == "pallas_interpret"
-    return _butterfly_pallas(x, w, transpose=transpose, interpret=interpret)
+    return _butterfly_pallas(x, w, transpose=transpose, block_b=block_b,
+                             segment=segment, interpret=interpret)
 
 
 def sandwich_apply(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
                    core: jnp.ndarray, sel_out: jnp.ndarray,
                    b_out: jnp.ndarray, *, scale_in: float = 1.0,
                    scale_out: float = 1.0,
-                   backend: Backend = "auto") -> jnp.ndarray:
+                   backend: Backend = "auto",
+                   block_b: Optional[int] = None,
+                   segment: Optional[int] = None) -> jnp.ndarray:
     """Fused butterfly sandwich (dense-layer replacement) over the last axis.
 
     Differentiable under every backend; the Pallas backends use the fused
-    custom_vjp backward kernel.
+    custom_vjp backward kernel with segmented stage checkpointing.
+    ``block_b``/``segment`` default to the autotuner (``tuning.py``).
     """
     backend = resolve_backend(backend)
     if backend == "jnp":
@@ -84,6 +97,7 @@ def sandwich_apply(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
     interpret = backend == "pallas_interpret"
     return _sandwich_pallas(x, b_in, sel_in, core, sel_out, b_out,
                             scale_in=scale_in, scale_out=scale_out,
+                            block_b=block_b, segment=segment,
                             interpret=interpret)
 
 

@@ -21,6 +21,13 @@ backward pass is one fused Pallas kernel chaining, per activation tile:
     → small-dense-core gradient ``dW' = dh₂ᵀ h₁`` (MXU)
     → input-butterfly VJP → dx
 
+Both butterfly VJPs use the segmented stage checkpointing of
+:func:`repro.kernels.butterfly._butterfly_bwd_block` — each butterfly gets
+its own VMEM scratch buffer for the ⌈p/segment⌉ boundary activations, so
+per-tile stage applications stay O(p) instead of the old O(p²) full-prefix
+recompute. ``block_b`` and the checkpoint segments default to the
+:mod:`repro.kernels.tuning` autotuner.
+
 Weight gradients (both butterflies + core) accumulate in float32 across the
 sequential batch grid into revisited output blocks. The fixed one-hot
 selection matrices get zero cotangents (they are structural, never trained).
@@ -34,10 +41,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.butterfly import num_stages
-from repro.kernels.butterfly import (DEFAULT_BLOCK_B, _butterfly_bwd_block,
-                                     _flatten_batch, _stage_apply)
+from repro.kernels import tuning
+from repro.kernels.butterfly import (_butterfly_bwd_block, _flatten_batch,
+                                     _stage_apply)
 
 __all__ = ["sandwich_matmul", "one_hot_select"]
 
@@ -79,8 +88,9 @@ def _sandwich_kernel(x_ref, w_in_ref, sel_in_ref, core_ref, sel_out_ref,
 
 def _sandwich_bwd_kernel(x_ref, w_in_ref, sel_in_ref, core_ref, sel_out_ref,
                          w_out_ref, g_ref, dx_ref, dwin_ref, dcore_ref,
-                         dwout_ref, *, stages_in: int, stages_out: int,
-                         scale_in: float, scale_out: float):
+                         dwout_ref, ckpt_out_ref, ckpt_in_ref, *,
+                         stages_in: int, stages_out: int, seg_in: int,
+                         seg_out: int, scale_in: float, scale_out: float):
     x = x_ref[...]
     g = g_ref[...]
     # --- recompute forward intermediates (VMEM-resident, no stash) ---
@@ -90,7 +100,8 @@ def _sandwich_bwd_kernel(x_ref, w_in_ref, sel_in_ref, core_ref, sel_out_ref,
     z = z.astype(x.dtype)
     # --- VJP through the output (transposed) butterfly ---
     gz, dwout = _butterfly_bwd_block(z, w_out_ref, g, stages_out,
-                                     transpose=True)
+                                     transpose=True, segment=seg_out,
+                                     ckpt_ref=ckpt_out_ref)
     # --- scatter / core / selection chain (float32 on the MXU) ---
     gzf = gz.astype(jnp.float32) * scale_out
     dh2 = jnp.dot(gzf, sel_out_ref[...].astype(jnp.float32).T,
@@ -104,7 +115,8 @@ def _sandwich_bwd_kernel(x_ref, w_in_ref, sel_in_ref, core_ref, sel_out_ref,
     du = du.astype(x.dtype)
     # --- VJP through the input butterfly ---
     dx, dwin = _butterfly_bwd_block(x, w_in_ref, du, stages_in,
-                                    transpose=False)
+                                    transpose=False, segment=seg_in,
+                                    ckpt_ref=ckpt_in_ref)
     dx_ref[...] = dx.astype(dx_ref.dtype)
 
     @pl.when(pl.program_id(0) == 0)
@@ -120,10 +132,28 @@ def _sandwich_bwd_kernel(x_ref, w_in_ref, sel_in_ref, core_ref, sel_out_ref,
         dwout_ref[...] += dwout
 
 
-def one_hot_select(idx, n: int, dtype=jnp.float32) -> jnp.ndarray:
-    """(n, k) one-hot matrix with column j selecting coordinate idx[j]."""
+@functools.lru_cache(maxsize=None)
+def one_hot_select_np(idx: tuple, n: int) -> np.ndarray:
+    """Cached numpy (n, k) one-hot with column j selecting idx[j].
+
+    The cache deliberately holds *numpy* arrays: a jax array built inside a
+    jit trace is a tracer, and caching one at module level leaks it into
+    later traces (UnexpectedTracerError). Callers convert per use — the
+    scatter construction is the cached part.
+    """
     sel = np.zeros((n, len(idx)), dtype=np.float32)
     sel[np.asarray(idx), np.arange(len(idx))] = 1.0
+    return sel
+
+
+def one_hot_select(idx, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """(n, k) one-hot matrix with column j selecting coordinate idx[j].
+
+    Backed by a module-level cache on ``(idx, n)``: the index sets are
+    frozen at layer init, so non-layers callers (benchmarks, encdec, tests)
+    stop rebuilding the numpy one-hot on every trace.
+    """
+    sel = one_hot_select_np(tuple(int(i) for i in idx), int(n))
     return jnp.asarray(sel, dtype=dtype)
 
 
@@ -145,6 +175,8 @@ def _sandwich_fwd_call(x, b_in, sel_in, core, sel_out, b_out, scale_in,
     k1 = sel_in.shape[1]
     k2 = sel_out.shape[0]
     assert core.shape == (k2, k1), (core.shape, k1, k2)
+    block_b = tuning.resolve_block_b("sandwich", max(n1, n2), x.dtype,
+                                     "fwd", block_b)
     x2, lead, b, bb, padded_b = _flatten_batch(x, block_b)
     grid = (padded_b // bb,)
     out = pl.pallas_call(
@@ -162,20 +194,31 @@ def _sandwich_fwd_call(x, b_in, sel_in, core, sel_out, b_out, scale_in,
 
 
 def _sandwich_bwd_call(x, b_in, sel_in, core, sel_out, b_out, g, scale_in,
-                       scale_out, block_b, interpret):
+                       scale_out, block_b, segment, interpret):
     p1, _, n1 = b_in.shape
     p2, _, n2 = b_out.shape
     k1 = sel_in.shape[1]
     k2 = sel_out.shape[0]
+    stages_in = num_stages(n1)
+    stages_out = num_stages(n2)
+    block_b = tuning.resolve_block_b("sandwich", max(n1, n2), x.dtype,
+                                     "bwd", block_b)
+    seg_in = tuning.resolve_segment(stages_in, segment, kernel="sandwich",
+                                    n=max(n1, n2), dtype=x.dtype)
+    seg_out = tuning.resolve_segment(stages_out, segment, kernel="sandwich",
+                                     n=max(n1, n2), dtype=x.dtype)
     x2, lead, b, bb, padded_b = _flatten_batch(x, block_b)
     g2, _, _, _, _ = _flatten_batch(g.astype(x.dtype), block_b)
     grid = (padded_b // bb,)
     in_specs = _sandwich_specs(bb, n1, n2, p1, p2, k1, k2)
     in_specs.append(pl.BlockSpec((bb, n2), lambda i: (i, 0)))
+    n_ckpt_in = len(range(0, stages_in, seg_in))
+    n_ckpt_out = len(range(0, stages_out, seg_out))
     dx, dwin, dcore, dwout = pl.pallas_call(
-        functools.partial(_sandwich_bwd_kernel, stages_in=num_stages(n1),
-                          stages_out=num_stages(n2),
-                          scale_in=scale_in, scale_out=scale_out),
+        functools.partial(_sandwich_bwd_kernel, stages_in=stages_in,
+                          stages_out=stages_out, seg_in=seg_in,
+                          seg_out=seg_out, scale_in=scale_in,
+                          scale_out=scale_out),
         grid=grid,
         in_specs=in_specs,
         out_specs=[
@@ -190,31 +233,36 @@ def _sandwich_bwd_call(x, b_in, sel_in, core, sel_out, b_out, g, scale_in,
             jax.ShapeDtypeStruct((k2, k1), jnp.float32),
             jax.ShapeDtypeStruct((p2, 2, n2), jnp.float32),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((n_ckpt_out, bb, n2), x2.dtype),
+            pltpu.VMEM((n_ckpt_in, bb, n1), x2.dtype),
+        ],
         interpret=interpret,
     )(x2, b_in.astype(x.dtype), sel_in.astype(x.dtype), core,
       sel_out, b_out.astype(x.dtype), g2)
     return dx[:b].reshape(*lead, n1), dwin, dcore, dwout
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
 def _sandwich_diff(x, b_in, sel_in, core, sel_out, b_out, scale_in,
-                   scale_out, block_b, interpret):
+                   scale_out, block_b, segment, interpret):
     return _sandwich_fwd_call(x, b_in, sel_in, core, sel_out, b_out,
                               scale_in, scale_out, block_b, interpret)
 
 
 def _sandwich_diff_fwd(x, b_in, sel_in, core, sel_out, b_out, scale_in,
-                       scale_out, block_b, interpret):
+                       scale_out, block_b, segment, interpret):
     out = _sandwich_fwd_call(x, b_in, sel_in, core, sel_out, b_out,
                              scale_in, scale_out, block_b, interpret)
     return out, (x, b_in, sel_in, core, sel_out, b_out)
 
 
-def _sandwich_diff_bwd(scale_in, scale_out, block_b, interpret, res, g):
+def _sandwich_diff_bwd(scale_in, scale_out, block_b, segment, interpret,
+                       res, g):
     x, b_in, sel_in, core, sel_out, b_out = res
     dx, dwin, dcore, dwout = _sandwich_bwd_call(
         x, b_in, sel_in, core, sel_out, b_out, g, scale_in, scale_out,
-        block_b, interpret)
+        block_b, segment, interpret)
     # one-hot selection matrices are structural constants — zero cotangent
     return (dx, dwin.astype(b_in.dtype), jnp.zeros_like(sel_in),
             dcore.astype(core.dtype), jnp.zeros_like(sel_out),
@@ -225,19 +273,22 @@ _sandwich_diff.defvjp(_sandwich_diff_fwd, _sandwich_diff_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("scale_in", "scale_out",
-                                             "block_b", "interpret"))
+                                             "block_b", "segment",
+                                             "interpret"))
 def sandwich_matmul(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
                     core: jnp.ndarray, sel_out: jnp.ndarray,
                     b_out: jnp.ndarray, *, scale_in: float = 1.0,
-                    scale_out: float = 1.0, block_b: int = DEFAULT_BLOCK_B,
+                    scale_out: float = 1.0, block_b=None, segment=None,
                     interpret: bool = False) -> jnp.ndarray:
     """Fused sandwich over the last axis: (..., n1) -> (..., n2).
 
     ``b_in``: (p1, 2, n1); ``sel_in``: (n1, k1); ``core``: (k2, k1);
     ``sel_out``: (k2, n2); ``b_out``: (p2, 2, n2). n1/n2 powers of two.
     Differentiable in ``x``, ``b_in``, ``core`` and ``b_out`` via a fused
-    Pallas backward kernel (custom_vjp); the one-hot selection matrices get
-    zero cotangents.
+    Pallas backward kernel (custom_vjp) with segmented stage checkpointing
+    for both butterflies; the one-hot selection matrices get zero
+    cotangents. ``block_b``/``segment`` default to the
+    :mod:`repro.kernels.tuning` autotuner.
     """
     return _sandwich_diff(x, b_in, sel_in, core, sel_out, b_out,
-                          scale_in, scale_out, block_b, interpret)
+                          scale_in, scale_out, block_b, segment, interpret)

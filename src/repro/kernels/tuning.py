@@ -1,0 +1,293 @@
+"""Analytic VMEM/roofline autotuner for the fused Pallas kernels.
+
+Every kernel in this package used to hard-code ``block_b = 256`` (and flash
+``block_q = block_kv = 128``) regardless of n, dtype, or direction. That is
+exactly the flat, hardware-unaware choice Pixelated Butterfly warns turns
+theoretical sparsity into wall-clock slowdowns: at n = 8192 the segmented
+backward keeps ~2·⌈√p⌉ activation tiles live, so a 256-row tile would need
+>80 MB of VMEM — an order of magnitude over budget — while at n = 256 a
+256-row tile underutilizes the VPU lanes.
+
+This module picks ``block_b`` (batch-tile rows) and ``segment`` (backward
+checkpoint segment length, see :mod:`repro.kernels.butterfly`) per
+``(kernel, n, dtype, direction)`` from an analytic VMEM-footprint model plus
+the roofline constants of :mod:`repro.launch.roofline`:
+
+* footprint model — weights + weight-grad accumulators + the number of
+  activation tiles the kernel keeps live (2 forward; ``⌈p/seg⌉ + seg + 3``
+  for the checkpointed backward) must fit the VMEM budget;
+* roofline estimate — per-row FLOPs over ``PEAK_FLOPS`` vs per-row HBM bytes
+  over ``HBM_BW``; reported in :class:`KernelChoice` so benchmarks and the
+  trainer can record *why* a block size was picked.
+
+Choices are cached (``functools.lru_cache``) and env-overridable:
+
+* ``REPRO_TUNE_BLOCK_B``   — force a batch-tile row count for butterfly and
+  sandwich kernels.
+* ``REPRO_TUNE_SEGMENT``   — force the backward checkpoint segment length.
+* ``REPRO_TUNE_BLOCK_Q``   — force the flash-attention q/kv block size.
+* ``REPRO_TUNE_VMEM_BUDGET`` — VMEM budget in bytes (default: 75% of 16 MB).
+
+Callers never pass magic numbers: ``block_b=None`` anywhere in
+:mod:`repro.kernels.ops`, :mod:`repro.core.layers`, :mod:`repro.core.encdec`
+or :class:`repro.configs.base.ButterflyConfig` means "ask the autotuner".
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.butterfly import num_stages
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS, VMEM_BYTES
+
+__all__ = [
+    "KernelChoice",
+    "tune",
+    "resolve_block_b",
+    "resolve_segment",
+    "default_segment",
+    "flash_blocks",
+    "vmem_budget",
+    "cache_entries",
+    "describe",
+]
+
+# v5e VMEM per core is ~16 MB (roofline.VMEM_BYTES); Mosaic needs headroom
+# for its own double-buffering and spills, so the model budgets a fraction
+# of it. The model only has to be right to within a power of two — block_b
+# candidates are powers of two anyway.
+VMEM_FRACTION = 0.75
+
+MIN_BLOCK_B = 8
+MAX_BLOCK_B = 1024
+
+
+@dataclass(frozen=True)
+class KernelChoice:
+    """One autotuned kernel configuration (and why it was picked)."""
+
+    kernel: str
+    n: int
+    dtype: str
+    mode: str                 # "fwd" | "bwd"
+    block_b: int
+    segment: int              # backward checkpoint segment (1 for fwd)
+    vmem_bytes: int           # modeled peak VMEM footprint at this choice
+    est_us_per_row: float     # roofline lower bound per activation row
+
+    def summary(self) -> str:
+        return (f"{self.kernel}/{self.mode} n={self.n} {self.dtype}: "
+                f"block_b={self.block_b} segment={self.segment} "
+                f"vmem={self.vmem_bytes / 2**20:.2f}MB "
+                f"roofline={self.est_us_per_row:.4f}us/row")
+
+
+def vmem_budget() -> int:
+    """VMEM bytes the footprint model may spend (env-overridable)."""
+    env = os.environ.get("REPRO_TUNE_VMEM_BUDGET", "").strip()
+    if env:
+        return int(env)
+    return int(VMEM_BYTES * VMEM_FRACTION)
+
+
+def default_segment(stages: int) -> int:
+    """⌈√p⌉ — minimizes live tiles (⌈p/seg⌉ checkpoints + seg recomputed)
+    of the segmented-checkpoint backward, the O(VMEM)/O(compute) knee."""
+    if stages <= 1:
+        return 1
+    return math.isqrt(stages - 1) + 1
+
+
+def _itemsize(dtype_name: str) -> int:
+    return jnp.dtype(dtype_name).itemsize
+
+
+def _min_block_b(dtype_name: str) -> int:
+    # TPU sublane minimum per dtype: f32 (8, 128), bf16 (16, 128), int8 (32,)
+    return {4: 8, 2: 16, 1: 32}.get(_itemsize(dtype_name), MIN_BLOCK_B)
+
+
+def _live_tiles(stages: int, segment: int, mode: str) -> int:
+    """Activation tiles of shape (block_b, n) the kernel keeps live."""
+    if mode == "fwd":
+        return 2                                   # x tile + out tile
+    n_ckpt = -(-stages // segment)
+    # checkpoints + within-segment recomputed activations + x/g/dx
+    return n_ckpt + min(segment, stages) + 3
+
+
+def _footprint(kernel: str, n: int, dtype_name: str, stages: int,
+               block_b: int, segment: int, mode: str) -> int:
+    """Modeled peak VMEM bytes for one grid step."""
+    item = _itemsize(dtype_name)
+    w_bytes = 2 * stages * n * item
+    tile = block_b * n * item
+    total = w_bytes + _live_tiles(stages, segment, mode) * tile
+    if mode == "bwd":
+        total += 2 * stages * n * 4                # float32 dw accumulator
+    if kernel == "sandwich":
+        # second butterfly's weights (+ grads) and the small core/selection
+        # matrices; modeled at the same n (the tuner is called with
+        # max(n1, n2), conservative for the smaller side)
+        total += w_bytes + (2 * stages * n * 4 if mode == "bwd" else 0)
+        if mode == "bwd":
+            # the sandwich backward allocates a checkpoint scratch buffer
+            # *per butterfly* and runs a second within-segment recompute,
+            # so its butterfly-specific live tiles (everything beyond the
+            # shared x/g/dx) are paid twice
+            total += (_live_tiles(stages, segment, mode) - 3) * tile
+        k = max(2, stages)                          # paper's k = log2 n
+        total += 2 * n * k * item + k * k * item
+    return total
+
+
+def _roofline_us_per_row(kernel: str, n: int, dtype_name: str,
+                         stages: int, mode: str) -> float:
+    """max(compute, memory) roofline time per activation row, in µs."""
+    item = _itemsize(dtype_name)
+    # one stage = 2 mul + 1 add per element; backward ~3x (recompute sweep +
+    # dual sweep + weight-grad reductions)
+    stage_flops = 3.0 * n * stages
+    flops = stage_flops * (3.0 if mode == "bwd" else 1.0)
+    if kernel == "sandwich":
+        flops *= 2.0
+    hbm = 2.0 * n * item * (2.0 if mode == "bwd" else 1.0)
+    return max(flops / PEAK_FLOPS, hbm / HBM_BW) * 1e6
+
+
+@functools.lru_cache(maxsize=None)
+def _tune_cached(kernel: str, n: int, dtype_name: str, mode: str,
+                 budget: int) -> KernelChoice:
+    """Pick (block_b, segment) for one (kernel, n, dtype, direction) cell.
+
+    Largest power-of-two ``block_b`` whose modeled footprint fits the VMEM
+    budget, floored at the dtype's sublane minimum; ``segment`` scans the
+    neighborhood of ⌈√p⌉ for the smallest live-tile count (ties go to the
+    larger segment: fewer checkpoint writes). ``budget`` is part of the
+    cache key so a changed ``REPRO_TUNE_VMEM_BUDGET`` is never served a
+    stale choice.
+    """
+    if kernel not in ("butterfly", "sandwich"):
+        raise ValueError(f"unknown tunable kernel {kernel!r}")
+    if mode not in ("fwd", "bwd"):
+        raise ValueError(f"unknown mode {mode!r}")
+    stages = num_stages(n)
+
+    seg0 = default_segment(stages)
+    if mode == "bwd":
+        cands = sorted({max(1, seg0 - 1), seg0, min(stages, seg0 + 1)})
+        segment = min(cands,
+                      key=lambda s: (_live_tiles(stages, s, mode), -s))
+    else:
+        segment = 1
+
+    floor = _min_block_b(dtype_name)
+    b = MAX_BLOCK_B
+    while b >= floor:
+        if _footprint(kernel, n, dtype_name, stages, b, segment,
+                      mode) <= budget:
+            break
+        b //= 2
+    block_b = max(b, floor)
+
+    return KernelChoice(
+        kernel=kernel, n=n, dtype=dtype_name, mode=mode,
+        block_b=block_b, segment=segment,
+        vmem_bytes=_footprint(kernel, n, dtype_name, stages, block_b,
+                              segment, mode),
+        est_us_per_row=_roofline_us_per_row(kernel, n, dtype_name, stages,
+                                            mode))
+
+
+def resolve_block_b(kernel: str, n: int, dtype, mode: str,
+                    override: Optional[int] = None) -> int:
+    """Concrete batch-tile rows: explicit override > env > autotuner."""
+    if override is not None:
+        return int(override)
+    env = os.environ.get("REPRO_TUNE_BLOCK_B", "").strip()
+    if env:
+        return int(env)
+    return tune(kernel, n, jnp.dtype(dtype).name, mode).block_b
+
+
+def resolve_segment(stages: int, override: Optional[int] = None,
+                    kernel: str = "butterfly", n: Optional[int] = None,
+                    dtype=jnp.float32) -> int:
+    """Concrete checkpoint segment length, clamped to [1, stages]."""
+    if override is not None:
+        return max(1, min(int(override), max(stages, 1)))
+    env = os.environ.get("REPRO_TUNE_SEGMENT", "").strip()
+    if env:
+        return max(1, min(int(env), max(stages, 1)))
+    if n is not None:
+        return tune(kernel, n, jnp.dtype(dtype).name, "bwd").segment
+    return default_segment(stages)
+
+
+def flash_blocks(seq_len: int, head_dim: int, dtype_name: str,
+                 mode: str = "fwd") -> Tuple[int, int]:
+    """(block_q, block_kv) for the flash kernels at one (S, D, dtype).
+
+    The kernels keep the full K/V (and in backward dO/lse/delta) rows of one
+    (batch·head) resident; block_q only controls the per-step tile, so pick
+    the largest power of two dividing S whose q-side tiles fit what is left
+    of the budget after the sequence-length-resident buffers. Env overrides
+    are read here, outside the cache, so they always win.
+    """
+    env = os.environ.get("REPRO_TUNE_BLOCK_Q", "").strip()
+    if env:
+        bq = int(env)
+        return bq, bq
+    return _flash_blocks_cached(seq_len, head_dim, dtype_name, mode,
+                                vmem_budget())
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_blocks_cached(seq_len: int, head_dim: int, dtype_name: str,
+                         mode: str, budget: int) -> Tuple[int, int]:
+    item = _itemsize(dtype_name)
+    resident = 2 * seq_len * head_dim * item        # K + V
+    if mode == "bwd":
+        resident += seq_len * head_dim * item       # dO sweep
+        resident += 2 * seq_len * 4                 # lse + delta (f32)
+    left = max(budget - resident, 0)
+    for bq in (512, 256, 128, 64, 32, 16, 8):
+        if seq_len % bq:
+            continue
+        # q tile + o/dq tile + f32 score/prob tiles against block_kv = bq
+        tiles = 2 * bq * head_dim * item + 2 * bq * head_dim * 4
+        tiles += 2 * bq * bq * 4
+        if tiles <= left or bq == 8:
+            return bq, bq
+    bq = math.gcd(seq_len, 8)
+    return bq, bq
+
+
+# lru_cache offers no introspection of stored values, so tune() keeps its
+# own registry of every decision for logging (TrainResult, benchmarks).
+_CHOICES: Dict[str, str] = {}
+
+
+def tune(kernel: str, n: int, dtype_name: str, mode: str = "fwd"
+         ) -> KernelChoice:
+    # env (budget) is read here, outside the cache, so overrides set after
+    # the first query still take effect
+    choice = _tune_cached(kernel, n, dtype_name, mode, vmem_budget())
+    _CHOICES[f"{kernel}/{mode}/n{n}/{dtype_name}"] = choice.summary()
+    return choice
+
+
+def cache_entries() -> Dict[str, str]:
+    """Every choice made so far (key -> one-line summary)."""
+    return dict(_CHOICES)
+
+
+def describe() -> str:
+    """One-line-per-choice summary of every tuning decision this process."""
+    return "; ".join(sorted(_CHOICES.values())) or "no kernel tuning queried"

@@ -29,6 +29,8 @@ PEAK_FLOPS = 197e12        # bf16 per chip
 HBM_BW = 819e9             # bytes/s per chip
 ICI_BW = 50e9              # bytes/s per link
 DCN_BW = 25e9              # bytes/s per pod uplink (modeled)
+VMEM_BYTES = 16 * 2 ** 20  # VMEM per core — the kernel autotuner's budget
+                           # base (repro.kernels.tuning)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

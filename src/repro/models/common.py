@@ -81,7 +81,9 @@ def linear_apply(cfg: ModelConfig, params: Dict, x: jnp.ndarray,
     spec = site_butterfly_spec(bc.seed, site_key or site, n_in,
                                int(n_out), bc.k_factor, bc.use_bias)
     return blayers.butterfly_linear_apply(spec, params, x,
-                                          backend=bc.backend)
+                                          backend=bc.backend,
+                                          block_b=bc.block_b,
+                                          segment=bc.segment)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ from repro.checkpoint.checkpointing import CheckpointManager
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data.pipeline import Prefetcher, SyntheticLM, for_model
 from repro.kernels import ops as kops
+from repro.kernels import tuning
 from repro.models import lm
 from repro.optim import optimizer as opt
 from repro.runtime import pytree as pt
@@ -35,6 +36,11 @@ class TrainResult:
     # resolved butterfly kernel backend the step function traced with
     # ("dense" when the model has no butterfly sites)
     kernel_backend: str = "dense"
+    # autotuner decisions (block_b/segment per kernel cell) registered while
+    # this run traced; falls back to the process-wide registry (prefixed
+    # "process-wide:") when tracing hit a warm cache from an earlier run in
+    # the same process. Empty on the jnp/dense paths.
+    kernel_tuning: str = ""
 
 
 class Trainer:
@@ -111,6 +117,7 @@ class Trainer:
                 start_step = s
                 resumed_from = s
 
+        tuning_before = set(tuning.cache_entries())
         prefetch = Prefetcher(self.data, start_step=start_step)
         straggler = StragglerMonitor(["host0"])
         losses: List[float] = []
@@ -138,7 +145,22 @@ class Trainer:
                 self.ckpt.wait()
         self.params = params
         self.opt_state = opt_state
+        # Tuning choices are made (and registered) at trace time. Report the
+        # entries this run added; if tracing hit a warm registry (another
+        # run with the same cells already happened in this process), fall
+        # back to the full registry, marked as such. jnp/dense paths never
+        # query the autotuner and report "".
+        tuning_summary = ""
+        if self.kernel_backend in ("pallas", "pallas_interpret"):
+            entries = tuning.cache_entries()
+            fresh = sorted(v for k, v in entries.items()
+                           if k not in tuning_before)
+            if fresh:
+                tuning_summary = "; ".join(fresh)
+            elif entries:
+                tuning_summary = "process-wide: " + tuning.describe()
         return TrainResult(steps_run=steps, losses=losses,
                            resumed_from=resumed_from,
                            step_times=step_times,
-                           kernel_backend=self.kernel_backend)
+                           kernel_backend=self.kernel_backend,
+                           kernel_tuning=tuning_summary)
