@@ -27,6 +27,12 @@ class ButterflyConfig:
     ``block_b``/``segment``: Pallas batch-tile rows and backward checkpoint
     segment; ``None`` (default) defers to the ``repro.kernels.tuning``
     VMEM/roofline autotuner instead of a magic constant.
+    ``mesh_shape``: opt-in multi-device execution of the butterfly sites —
+    ``(8,)`` builds a ``("data",)`` mesh, ``(2, 4)`` a ``("pod", "data")``
+    mesh — and every butterfly site runs batch-sharded under ``shard_map``
+    with replicated stage weights and psum'd weight gradients
+    (``repro.runtime.butterfly_sharding``). ``None`` (default) keeps the
+    single-device path.
     """
 
     sites: Tuple[str, ...] = ("lm_head",)
@@ -36,6 +42,7 @@ class ButterflyConfig:
     backend: str = "auto"
     block_b: Optional[int] = None
     segment: Optional[int] = None
+    mesh_shape: Optional[Tuple[int, ...]] = None
 
 
 @dataclass(frozen=True)

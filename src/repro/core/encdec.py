@@ -70,20 +70,24 @@ def init_params(key: jax.Array, spec: EncDecSpec) -> Dict[str, jnp.ndarray]:
 def apply_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray, *,
             backend: kops.Backend = "auto",
             block_b: Optional[int] = None,
-            segment: Optional[int] = None) -> jnp.ndarray:
+            segment: Optional[int] = None,
+            mesh=None, mesh_axes=None) -> jnp.ndarray:
     """``B X`` for column-data ``X (n×d)`` -> (ℓ×d).
 
     The butterfly product dispatches through :mod:`repro.kernels.ops`; the
     fused Pallas path is differentiable (custom_vjp), so training through
     ``apply_B`` keeps the single-HBM-round-trip kernel in both directions.
     ``block_b``/``segment`` default to the :mod:`repro.kernels.tuning`
-    autotuner.
+    autotuner. ``mesh`` shards the data columns (the batch dim of the
+    transposed product) over the mesh's data axes via
+    :mod:`repro.runtime.butterfly_sharding`.
     """
     Xp = X
     if spec.pad_n != spec.n:
         Xp = jnp.pad(X, ((0, spec.pad_n - spec.n), (0, 0)))
     H = kops.butterfly_apply(Xp.T, w, backend=backend, block_b=block_b,
-                             segment=segment)          # (d, pad_n)
+                             segment=segment, mesh=mesh,
+                             mesh_axes=mesh_axes)      # (d, pad_n)
     Ht = bf.truncate(H, spec.trunc_idx, spec.pad_n, spec.jl_scale)
     return Ht.T                                        # (ℓ, d)
 
@@ -91,9 +95,10 @@ def apply_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray, *,
 def forward(spec: EncDecSpec, params: Dict, X: jnp.ndarray, *,
             backend: kops.Backend = "auto",
             block_b: Optional[int] = None,
-            segment: Optional[int] = None) -> jnp.ndarray:
+            segment: Optional[int] = None,
+            mesh=None, mesh_axes=None) -> jnp.ndarray:
     Xt = apply_B(spec, params["B"], X, backend=backend, block_b=block_b,
-                 segment=segment)
+                 segment=segment, mesh=mesh, mesh_axes=mesh_axes)
     return params["D"] @ (params["E"] @ Xt)
 
 
@@ -101,9 +106,10 @@ def loss_fn(spec: EncDecSpec, params: Dict, X: jnp.ndarray,
             Y: jnp.ndarray, *,
             backend: kops.Backend = "auto",
             block_b: Optional[int] = None,
-            segment: Optional[int] = None) -> jnp.ndarray:
+            segment: Optional[int] = None,
+            mesh=None, mesh_axes=None) -> jnp.ndarray:
     Yb = forward(spec, params, X, backend=backend, block_b=block_b,
-                 segment=segment)
+                 segment=segment, mesh=mesh, mesh_axes=mesh_axes)
     return jnp.sum(jnp.square(Yb - Y))
 
 
@@ -191,20 +197,22 @@ def train(spec: EncDecSpec, params: Dict, X: jnp.ndarray, Y: jnp.ndarray,
           log_every: int = 0,
           backend: kops.Backend = "auto",
           block_b: Optional[int] = None,
-          segment: Optional[int] = None) -> Tuple[Dict, list]:
+          segment: Optional[int] = None,
+          mesh=None, mesh_axes=None) -> Tuple[Dict, list]:
     """Full-batch Adam on the reconstruction loss.
 
     ``train_B=False`` freezes the butterfly (phase 1 of two-phase learning).
     ``backend`` selects the butterfly kernel path — on TPU the fused Pallas
     kernel runs in the gradient too (custom_vjp); ``block_b``/``segment``
-    tune its tiles (``None`` = autotuned). Returns (params, loss history).
+    tune its tiles (``None`` = autotuned); ``mesh`` data-shards the
+    butterfly product across devices. Returns (params, loss history).
     """
     tx = opt.adamw(lr)
     state = tx.init(params)
 
     def masked_loss(p):
         return loss_fn(spec, p, X, Y, backend=backend, block_b=block_b,
-                       segment=segment)
+                       segment=segment, mesh=mesh, mesh_axes=mesh_axes)
 
     @jax.jit
     def step(params, state):

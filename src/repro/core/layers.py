@@ -149,7 +149,8 @@ def butterfly_linear_apply(spec: ButterflySpec, params: dict,
                            x: jnp.ndarray, *,
                            backend: kops.Backend = "auto",
                            block_b: Optional[int] = None,
-                           segment: Optional[int] = None) -> jnp.ndarray:
+                           segment: Optional[int] = None,
+                           mesh=None, mesh_axes=None) -> jnp.ndarray:
     """Apply the sandwich along the last axis: (..., n_in) -> (..., n_out).
 
     ``backend`` selects the kernel path (see :mod:`repro.kernels.ops`):
@@ -157,10 +158,18 @@ def butterfly_linear_apply(spec: ButterflySpec, params: dict,
     sandwich kernel — differentiable in both activations and weights via its
     custom_vjp — and ``auto`` picks per platform. ``block_b``/``segment``
     (Pallas tile rows and backward checkpoint interval) default to the
-    :mod:`repro.kernels.tuning` autotuner.
+    :mod:`repro.kernels.tuning` autotuner. ``mesh`` batch-shards the whole
+    layer (padding, kernel, bias) over the mesh's data axes with replicated
+    weights and psum'd weight grads (:mod:`repro.runtime.butterfly_sharding`).
     """
     if x.shape[-1] != spec.n_in:
         raise ValueError(f"expected last dim {spec.n_in}, got {x.shape[-1]}")
+    route = kops._sharded_route(mesh, mesh_axes)
+    if route is not None:
+        bsh, axes = route
+        return bsh.sharded_butterfly_linear_apply(
+            spec, params, x, mesh=mesh, axes=axes, backend=backend,
+            block_b=block_b, segment=segment)
     resolved = kops.resolve_backend(backend)
     # pad to power of two
     if spec.pad_in != spec.n_in:

@@ -20,15 +20,24 @@ rows) and ``segment`` (backward checkpoint interval) knobs. ``None`` — the
 default everywhere — defers to the :mod:`repro.kernels.tuning` VMEM/roofline
 autotuner, so callers never pass magic numbers; explicit ints override it
 (as do the ``REPRO_TUNE_*`` env vars, see ``tuning.py``).
+
+Multi-device: every entry point takes an optional ``mesh`` (plus
+``mesh_axes``, default ``("pod", "data")`` filtered to the mesh). When given
+a mesh with a non-trivial data axis, the call routes through
+:mod:`repro.runtime.butterfly_sharding`: activations batch-sharded via
+``shard_map``, stage weights replicated, weight gradients psum'd through the
+fused custom_vjp backward. ``mesh=None`` (the default) is the single-device
+path, bit-identical to before.
 """
 
 from __future__ import annotations
 
 import os
-from typing import Literal, Optional
+from typing import Literal, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from repro.kernels import ref as _ref
 from repro.kernels.butterfly import butterfly_matmul as _butterfly_pallas
@@ -58,18 +67,40 @@ def resolve_backend(backend: Backend = "auto") -> str:
     return backend
 
 
+def _sharded_route(mesh: Optional[Mesh], mesh_axes: Optional[Sequence[str]]):
+    """Resolve the (mesh, axes) pair to shard over, or None for the local
+    path. Imported lazily: runtime.butterfly_sharding wraps these entry
+    points, so a top-level import would be circular."""
+    if mesh is None:
+        return None
+    from repro.runtime import butterfly_sharding as bsh
+    axes = bsh.data_axes(mesh, mesh_axes)
+    return (bsh, axes) if axes else None
+
+
 def butterfly_apply(x: jnp.ndarray, w: jnp.ndarray, *,
                     transpose: bool = False,
                     backend: Backend = "auto",
                     block_b: Optional[int] = None,
-                    segment: Optional[int] = None) -> jnp.ndarray:
+                    segment: Optional[int] = None,
+                    mesh: Optional[Mesh] = None,
+                    mesh_axes: Optional[Sequence[str]] = None
+                    ) -> jnp.ndarray:
     """Fused butterfly product over the last axis of ``x``.
 
     Differentiable under every backend; the Pallas backends use the fused
     custom_vjp backward kernel with segmented stage checkpointing.
     ``block_b``/``segment`` default to the autotuner (``tuning.py``).
+    ``mesh`` batch-shards the call over its data axes (module docstring).
     """
     backend = resolve_backend(backend)
+    route = _sharded_route(mesh, mesh_axes)
+    if route is not None:
+        bsh, axes = route
+        return bsh.sharded_butterfly_apply(x, w, mesh=mesh, axes=axes,
+                                           transpose=transpose,
+                                           backend=backend, block_b=block_b,
+                                           segment=segment)
     if backend == "jnp":
         return _ref.butterfly_ref(w.astype(x.dtype), x, transpose=transpose)
     interpret = backend == "pallas_interpret"
@@ -83,14 +114,24 @@ def sandwich_apply(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
                    scale_out: float = 1.0,
                    backend: Backend = "auto",
                    block_b: Optional[int] = None,
-                   segment: Optional[int] = None) -> jnp.ndarray:
+                   segment: Optional[int] = None,
+                   mesh: Optional[Mesh] = None,
+                   mesh_axes: Optional[Sequence[str]] = None) -> jnp.ndarray:
     """Fused butterfly sandwich (dense-layer replacement) over the last axis.
 
     Differentiable under every backend; the Pallas backends use the fused
     custom_vjp backward kernel with segmented stage checkpointing.
     ``block_b``/``segment`` default to the autotuner (``tuning.py``).
+    ``mesh`` batch-shards the call over its data axes (module docstring).
     """
     backend = resolve_backend(backend)
+    route = _sharded_route(mesh, mesh_axes)
+    if route is not None:
+        bsh, axes = route
+        return bsh.sharded_sandwich_apply(
+            x, b_in, sel_in, core, sel_out, b_out, mesh=mesh, axes=axes,
+            scale_in=scale_in, scale_out=scale_out, backend=backend,
+            block_b=block_b, segment=segment)
     if backend == "jnp":
         return _ref.sandwich_ref(x, b_in, core, b_out, sel_in, sel_out,
                                  scale_in, scale_out)

@@ -28,12 +28,33 @@ if "--xla-perf-flags" in os.sys.argv:
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " "
                                + _XLA_PERF_FLAGS).strip()
 
+# Simulated multi-device CPU run (--simulated-devices N): the host device
+# count must reach XLA before jax initializes, hence the pre-import argv
+# peek (mirrors the --xla-perf-flags pattern above). Handles both the
+# space-separated and --simulated-devices=N spellings; a malformed value is
+# left for argparse to reject with a proper usage error.
+for _i, _arg in enumerate(os.sys.argv):
+    if _arg == "--simulated-devices" or _arg.startswith(
+            "--simulated-devices="):
+        _ndev = (_arg.split("=", 1)[1] if "=" in _arg
+                 else (os.sys.argv[_i + 1]
+                       if _i + 1 < len(os.sys.argv) else ""))
+        if _ndev.isdigit() and int(_ndev) > 0:
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={int(_ndev)}"
+            ).strip()
+        break
+
 import jax  # noqa: E402  (after XLA_FLAGS)
 import numpy as np  # noqa: E402
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    # allow_abbrev=False: the pre-import argv peeks above match flags by
+    # exact spelling, so abbreviations ('--simulated 8') must not be
+    # silently accepted by argparse while missing the peek
+    ap = argparse.ArgumentParser(allow_abbrev=False)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=1000)
     ap.add_argument("--seq-len", type=int, default=4096)
@@ -51,6 +72,13 @@ def main():
                     help="call jax.distributed.initialize() (multihost)")
     ap.add_argument("--xla-perf-flags", action="store_true",
                     help="enable TPU latency-hiding/async-collective flags")
+    ap.add_argument("--mesh-shape", default="",
+                    help="butterfly data-parallel mesh, e.g. '8' for a "
+                         "(data,) mesh or '2x4' for (pod, data); requires "
+                         "a butterfly arch (sharded via shard_map)")
+    ap.add_argument("--simulated-devices", type=int, default=0,
+                    help="force N simulated host devices (CPU; must be >= "
+                         "the mesh size). Handled before jax import.")
     args = ap.parse_args()
 
     if args.distributed:
@@ -61,6 +89,22 @@ def main():
     from repro.train.trainer import Trainer
 
     cfg = registry.get(args.arch)
+    if args.mesh_shape:
+        from dataclasses import replace as dc_replace
+        if cfg.butterfly is None:
+            raise SystemExit(
+                f"--mesh-shape needs a butterfly arch (try "
+                f"{args.arch}-butterfly); {cfg.name} has no butterfly sites")
+        try:
+            shape = tuple(int(s) for s in args.mesh_shape.split("x"))
+            if not shape or any(s <= 0 for s in shape):
+                raise ValueError(shape)
+        except ValueError:
+            raise SystemExit(
+                f"invalid --mesh-shape {args.mesh_shape!r}: expected e.g. "
+                f"'8' (data mesh) or '2x4' (pod x data)")
+        cfg = cfg.with_(butterfly=dc_replace(cfg.butterfly,
+                                             mesh_shape=shape))
     tc = TrainConfig(
         learning_rate=args.lr, warmup_steps=args.warmup_steps,
         total_steps=args.steps, weight_decay=args.weight_decay,
@@ -79,6 +123,7 @@ def main():
     print(f"[train] done: loss {np.mean(result.losses[:5]):.4f} → "
           f"{np.mean(result.losses[-5:]):.4f}; "
           f"median step {np.median(result.step_times) * 1e3:.0f} ms"
+          + (f"; mesh {result.mesh_layout}" if result.mesh_layout else "")
           + (f"; resumed from step {result.resumed_from}"
              if result.resumed_from else ""))
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import butterfly as bfly
 from repro.core import layers as blayers
+from repro.runtime import sharding as rsharding
 from repro.runtime.pytree import ParamSpec
 from repro.runtime.sharding import constrain
 
@@ -56,19 +57,41 @@ def linear_specs(cfg: ModelConfig, n_in: int, n_out: int,
                                    bc.k_factor, bc.use_bias)
         p1 = bfly.num_stages(spec.pad_in)
         p2 = bfly.num_stages(spec.pad_out)
+        # every dim carries a named logical axis with an explicit (replicate)
+        # entry in DEFAULT_RULES, so logical_to_pspec resolves butterfly
+        # params deliberately instead of through the unknown-name fallback
         out = {
             "b_in": ParamSpec((p1, 2, spec.pad_in), dt,
-                              ("stages", None, "butterfly_n"), init="fjlt"),
+                              ("stages", "butterfly_pair", "butterfly_n"),
+                              init="fjlt"),
             "b_out": ParamSpec((p2, 2, spec.pad_out), dt,
-                               ("stages", None, "butterfly_n"), init="fjlt"),
-            "core": ParamSpec((spec.k_out, spec.k_in), dt, (None, None),
+                               ("stages", "butterfly_pair", "butterfly_n"),
+                               init="fjlt"),
+            "core": ParamSpec((spec.k_out, spec.k_in), dt,
+                              ("butterfly_core_out", "butterfly_core_in"),
                               init="scaled_normal", scale=scale),
         }
         if bc.use_bias:
-            out["bias"] = ParamSpec((n_out,), dt, (None,), init="zeros")
+            out["bias"] = ParamSpec((n_out,), dt, ("butterfly_bias",),
+                                    init="zeros")
         return out
     return {"w": ParamSpec((n_in, n_out), dt, axes, init="scaled_normal",
                            scale=scale, fan_in_dim=0)}
+
+
+def _butterfly_mesh(cfg: ModelConfig):
+    """Mesh for sharded butterfly sites: only when the model opts in via
+    ``ButterflyConfig.mesh_shape``. Prefers the active sharding context's
+    mesh (the Trainer installs one built from that same shape); otherwise
+    builds it from the config."""
+    bc = cfg.butterfly
+    if bc is None or bc.mesh_shape is None:
+        return None
+    ctx = rsharding.active_ctx()
+    if ctx is not None and ctx.mesh is not None:
+        return ctx.mesh
+    from repro.launch.mesh import butterfly_mesh
+    return butterfly_mesh(bc.mesh_shape)
 
 
 def linear_apply(cfg: ModelConfig, params: Dict, x: jnp.ndarray,
@@ -83,7 +106,8 @@ def linear_apply(cfg: ModelConfig, params: Dict, x: jnp.ndarray,
     return blayers.butterfly_linear_apply(spec, params, x,
                                           backend=bc.backend,
                                           block_b=bc.block_b,
-                                          segment=bc.segment)
+                                          segment=bc.segment,
+                                          mesh=_butterfly_mesh(cfg))
 
 
 # ---------------------------------------------------------------------------

@@ -26,21 +26,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.runtime.compat import shard_map_compat as _shard_map
+
 PyTree = Any
-
-# jax >= 0.6 promotes shard_map to the top level and renames check_rep ->
-# check_vma; older jax keeps it in jax.experimental. Neither check is wanted
-# here (the output psum deliberately breaks per-shard replication tracking).
-if hasattr(jax, "shard_map"):
-    def _shard_map(f, *, mesh, in_specs, out_specs):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-else:
-    from jax.experimental.shard_map import shard_map as _exp_shard_map
-
-    def _shard_map(f, *, mesh, in_specs, out_specs):
-        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs, check_rep=False)
 
 
 def pipeline_apply(stage_fn: Callable[[PyTree, jnp.ndarray], jnp.ndarray],

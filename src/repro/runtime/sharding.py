@@ -47,9 +47,25 @@ DEFAULT_RULES: Dict[str, MeshAxes] = {
     "seq_kv": "model",          # KV-cache sequence shard
     "rnn_state": "model",
     "conv": None,
+    # Butterfly sandwich params (repro.core.layers): O(n log n) weights,
+    # deliberately replicated on every device — the distributed path shards
+    # the *batch* via shard_map and psums the weight grads instead
+    # (repro.runtime.butterfly_sharding). Explicit entries for every logical
+    # axis the butterfly ParamSpecs use, so logical_to_pspec resolves them
+    # without the unknown-name fallback.
     "stages": None,             # butterfly stage axis — replicated, tiny
-    "butterfly_n": None,
+    "butterfly_pair": None,     # the (a, b) coefficient pair per stage
+    "butterfly_n": None,        # padded feature dim of the stage weights
+    "butterfly_core_out": None,  # k2 x k1 dense core of the sandwich
+    "butterfly_core_in": None,
+    "butterfly_bias": None,
 }
+
+# Logical axis names introduced by the butterfly layers — one place for the
+# property tests (and future rule sets) to enumerate them.
+BUTTERFLY_AXES: Tuple[str, ...] = (
+    "stages", "butterfly_pair", "butterfly_n", "butterfly_core_out",
+    "butterfly_core_in", "butterfly_bias")
 
 
 def _axes_tuple(entry: MeshAxes) -> Tuple[str, ...]:

@@ -11,18 +11,23 @@ from dataclasses import dataclass, field
 from dataclasses import replace as dc_replace
 from typing import Any, Dict, List, Optional
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.checkpoint.checkpointing import CheckpointManager
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data.pipeline import Prefetcher, SyntheticLM, for_model
 from repro.kernels import ops as kops
 from repro.kernels import tuning
+from repro.launch.mesh import butterfly_mesh
 from repro.models import lm
 from repro.optim import optimizer as opt
 from repro.runtime import pytree as pt
+from repro.runtime import sharding as rsh
 from repro.runtime.fault_tolerance import StragglerMonitor
 from repro.train import steps as steps_lib
 
@@ -41,6 +46,9 @@ class TrainResult:
     # "process-wide:") when tracing hit a warm cache from an earlier run in
     # the same process. Empty on the jnp/dense paths.
     kernel_tuning: str = ""
+    # mesh layout the butterfly sites ran under (e.g. "data=8" or
+    # "pod=2,data=4"); "" on the single-device path
+    mesh_layout: str = ""
 
 
 class Trainer:
@@ -69,6 +77,16 @@ class Trainer:
             self.cfg = model_cfg
         else:
             self.kernel_backend = "dense"
+        # Multi-device butterfly execution: ButterflyConfig.mesh_shape opts
+        # in. Build the mesh once up front (fails loudly here — with the
+        # XLA_FLAGS recipe in the message — rather than mid-trace) and
+        # install it as the active sharding context while the step function
+        # traces, so every butterfly site routes through the shard_map
+        # wrappers of repro.runtime.butterfly_sharding.
+        bc = model_cfg.butterfly
+        self.mesh = (butterfly_mesh(bc.mesh_shape)
+                     if bc is not None and bc.mesh_shape is not None
+                     else None)
         self.step_fn = jax.jit(steps_lib.make_train_step(
             model_cfg, self.tx, train_cfg.microbatches),
             donate_argnums=(0, 1))
@@ -82,6 +100,24 @@ class Trainer:
         opt_state = self.tx.init(params)
         return params, opt_state
 
+    def _sharding_scope(self):
+        """Active-sharding context for trace/execution when a mesh is
+        configured; no-op otherwise."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return rsh.use_sharding(self.mesh)
+
+    def _mesh_layout(self) -> str:
+        if self.mesh is None:
+            return ""
+        return ",".join(f"{a}={s}" for a, s in self.mesh.shape.items())
+
+    def _put_batch(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Place a (batch, ...) array batch-sharded on the mesh's data axes
+        (replicate when the batch doesn't divide them)."""
+        spec = rsh.batch_axes(self.mesh, rsh.DEFAULT_RULES, x.shape[0])
+        return jax.device_put(x, NamedSharding(self.mesh, spec))
+
     def _make_batch_arrays(self, batch: Dict[str, np.ndarray]
                            ) -> Dict[str, jnp.ndarray]:
         out = {k: jnp.asarray(v) for k, v in batch.items()}
@@ -94,6 +130,8 @@ class Trainer:
         if cfg.n_enc_layers:
             out["frames"] = jnp.asarray(rng.normal(
                 size=(B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+        if self.mesh is not None:
+            out = {k: self._put_batch(v) for k, v in out.items()}
         return out
 
     def run(self, steps: int, params=None, opt_state=None,
@@ -127,8 +165,11 @@ class Trainer:
                 step_idx, raw = next(prefetch)
                 batch = self._make_batch_arrays(raw)
                 t0 = time.monotonic()
-                params, opt_state, metrics = self.step_fn(
-                    params, opt_state, batch)
+                # the sharding ctx must be live whenever the step function
+                # (re)traces — butterfly sites read the active mesh then
+                with self._sharding_scope():
+                    params, opt_state, metrics = self.step_fn(
+                        params, opt_state, batch)
                 loss = float(metrics["loss"])
                 dt = time.monotonic() - t0
                 straggler.record({"host0": dt})
@@ -163,4 +204,5 @@ class Trainer:
                            resumed_from=resumed_from,
                            step_times=step_times,
                            kernel_backend=self.kernel_backend,
-                           kernel_tuning=tuning_summary)
+                           kernel_tuning=tuning_summary,
+                           mesh_layout=self._mesh_layout())

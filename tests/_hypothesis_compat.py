@@ -15,11 +15,21 @@ except ImportError:
 
     HAVE_HYPOTHESIS = False
 
+    class _DummyStrategy:
+        """Inert stand-in for a strategy object: absorbs chained calls like
+        ``st.integers(1, 8).map(f).filter(g)`` at decoration time."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
     class _AnyStrategy:
         """Accepts any strategy constructor call at decoration time."""
 
         def __getattr__(self, name):
-            return lambda *a, **k: None
+            return _DummyStrategy()
 
     st = _AnyStrategy()
 

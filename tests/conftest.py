@@ -1,4 +1,51 @@
+"""Test-suite bootstrap: src/ on the path + 8 simulated XLA devices.
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` must be in the
+environment BEFORE jax initializes its backends, and pytest imports conftest
+before any test module, so this is the one place the flag can be set
+reliably. Individual test modules must NOT set it themselves — if jax was
+already initialized the assignment silently no-ops and every multi-device
+test "passes" on a degenerate 1-device mesh (the old ``test_pipeline.py``
+import-time ordering bug). The session fixture below turns that silent
+no-op into a loud failure.
+
+Subprocess-based tests (dry-run) still own their environment: they overwrite
+XLA_FLAGS before importing jax in the child, so inheriting this flag is
+harmless.
+"""
+
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SIMULATED_DEVICES = 8
+_FLAG = "--xla_force_host_platform_device_count"
+
+# Set unconditionally: jax reads XLA_FLAGS lazily at first backend use, so
+# even a jax module imported earlier (by a plugin, say) still honors the
+# flag as long as no devices were touched yet. The fixture below catches
+# the genuinely-too-late case (backend already initialized) loudly.
+_flags = os.environ.get("XLA_FLAGS", "")
+if _FLAG not in _flags:
+    os.environ["XLA_FLAGS"] = f"{_flags} {_FLAG}={SIMULATED_DEVICES}".strip()
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _assert_simulated_device_count():
+    """Fail the whole session loudly when the simulated-device setup didn't
+    take (jax imported before conftest, or a conflicting XLA_FLAGS): the
+    sharding/pipeline tests would otherwise silently run on 1 device and
+    test nothing."""
+    import jax
+
+    if jax.default_backend() == "cpu":
+        got = jax.device_count()
+        assert got == SIMULATED_DEVICES, (
+            f"expected {SIMULATED_DEVICES} simulated host devices, got "
+            f"{got}. jax initialized before tests/conftest.py could set "
+            f"XLA_FLAGS={_FLAG}={SIMULATED_DEVICES} (or the environment "
+            f"overrides it); multi-device tests would silently no-op.")
+    yield

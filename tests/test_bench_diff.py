@@ -1,0 +1,131 @@
+"""Unit tests for the CI benchmark regression gate (``benchmarks/diff.py``).
+
+The gate fails PRs, so the gate itself is gated: regression detection,
+skipped/null/metric-only row exemptions, vanished-row bypass detection and
+the cross-machine median normalization all get direct coverage here.
+``diff.py`` is a script, not a package module — load it by path.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_DIFF_PATH = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                          "diff.py")
+_spec = importlib.util.spec_from_file_location("bench_diff", _DIFF_PATH)
+diff = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(diff)
+
+
+def _write(tmp_path, name, rows):
+    path = tmp_path / name
+    path.write_text(json.dumps({"rows": rows}))
+    return str(path)
+
+
+def _row(name, us, **kw):
+    return {"name": name, "us_per_call": us, **kw}
+
+
+def _run(tmp_path, base_rows, fresh_rows, *extra):
+    base = _write(tmp_path, "base.json", base_rows)
+    fresh = _write(tmp_path, "fresh.json", fresh_rows)
+    return diff.main([base, fresh, "--min-us", "0", *extra])
+
+
+def test_unchanged_rows_pass(tmp_path):
+    rows = [_row(f"b{i}", 10000.0) for i in range(6)]
+    assert _run(tmp_path, rows, rows) == 0
+
+
+def test_single_row_regression_fails(tmp_path):
+    base = [_row(f"b{i}", 10000.0) for i in range(6)]
+    fresh = [_row(f"b{i}", 10000.0) for i in range(5)]
+    fresh.append(_row("b5", 14000.0))  # 1.4x > 1.25x threshold
+    assert _run(tmp_path, base, fresh) == 1
+
+
+def test_regression_within_threshold_passes(tmp_path):
+    base = [_row(f"b{i}", 10000.0) for i in range(6)]
+    fresh = [_row(f"b{i}", 10000.0) for i in range(5)]
+    fresh.append(_row("b5", 12000.0))  # 1.2x < 1.25x
+    assert _run(tmp_path, base, fresh) == 0
+
+
+def test_skipped_and_null_rows_never_gate(tmp_path):
+    """Rows skipped on either side (CPU-skipped TPU benchmarks emit
+    us_per_call null + skipped true) are not comparable and never fail."""
+    base = [_row("b0", 10000.0),
+            _row("skipme", None, skipped=True),
+            _row("metric_only", 0.0)]
+    fresh = [_row("b0", 10000.0),
+             _row("skipme", None, skipped=True),
+             _row("metric_only", 0.0)]
+    assert _run(tmp_path, base, fresh) == 0
+    # a 100x "regression" on a skipped-in-baseline row still passes
+    fresh2 = [_row("b0", 10000.0),
+              _row("skipme", 999999.0),
+              _row("metric_only", 0.0)]
+    assert _run(tmp_path, base, fresh2) == 0
+
+
+def test_vanished_timed_row_fails(tmp_path):
+    """A timed baseline row missing from the fresh run is a gate bypass."""
+    base = [_row("b0", 10000.0), _row("b1", 10000.0)]
+    fresh = [_row("b0", 10000.0)]
+    assert _run(tmp_path, base, fresh) == 1
+
+
+def test_timed_row_coming_back_skipped_fails(tmp_path):
+    """A widened skip guard (timed before, skipped now) must not pass."""
+    base = [_row("b0", 10000.0), _row("b1", 10000.0)]
+    fresh = [_row("b0", 10000.0), _row("b1", None, skipped=True)]
+    assert _run(tmp_path, base, fresh) == 1
+
+
+def test_median_normalization_absorbs_uniform_slowdown(tmp_path):
+    """A uniformly 2x-slower machine shifts every ratio equally: the median
+    normalization gates nothing, while --no-normalize fails everything."""
+    base = [_row(f"b{i}", 10000.0) for i in range(6)]
+    fresh = [_row(f"b{i}", 20000.0) for i in range(6)]
+    assert _run(tmp_path, base, fresh) == 0
+    assert _run(tmp_path, base, fresh, "--no-normalize") == 1
+
+
+def test_median_normalization_still_catches_local_regression(tmp_path):
+    """On a uniformly slower machine, one row that regressed on top of the
+    machine factor still stands out against the median."""
+    base = [_row(f"b{i}", 10000.0) for i in range(6)]
+    fresh = [_row(f"b{i}", 20000.0) for i in range(5)]
+    fresh.append(_row("b5", 40000.0))  # 4x raw = 2x normalized
+    assert _run(tmp_path, base, fresh) == 1
+
+
+def test_below_min_rows_gates_on_raw_ratios(tmp_path):
+    """With fewer comparable pairs than --min-rows there is no population to
+    estimate machine speed from: raw ratios gate."""
+    base = [_row("b0", 10000.0), _row("b1", 10000.0)]
+    fresh = [_row("b0", 20000.0), _row("b1", 20000.0)]
+    assert _run(tmp_path, base, fresh) == 1  # 2 pairs < default min-rows 5
+    assert _run(tmp_path, base, fresh, "--min-rows", "1") == 0  # normalized
+
+
+def test_min_us_floor_ignores_noise_rows(tmp_path):
+    """Sub-floor baseline rows are shared-runner noise: never compared, and
+    their disappearance doesn't count as a vanished timed row either."""
+    base = [_row("fast", 100.0), _row("slow", 10000.0)]
+    fresh = [_row("slow", 10000.0)]
+    baseline = _write(tmp_path, "b2.json", base)
+    fresh_p = _write(tmp_path, "f2.json", fresh)
+    assert diff.main([baseline, fresh_p, "--min-us", "5000"]) == 0
+
+
+@pytest.mark.parametrize("bad", [None, 0.0])
+def test_comparable_predicate(bad):
+    assert not diff.comparable({"us_per_call": bad}, 0.0)
+    assert not diff.comparable({"us_per_call": 10.0, "skipped": True}, 0.0)
+    assert not diff.comparable(None, 0.0)
+    assert diff.comparable({"us_per_call": 10.0}, 0.0)
+    assert not diff.comparable({"us_per_call": 10.0}, 100.0)  # below floor

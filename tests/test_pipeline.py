@@ -1,61 +1,52 @@
 """GPipe pipeline parallelism: forward + gradient equivalence with the
-unpipelined stack, on 8 simulated devices (subprocess — XLA_FLAGS must be
-set before jax initializes)."""
+unpipelined stack, on the suite's 8 simulated devices.
 
-import os
-import subprocess
-import sys
+Runs in-process: ``tests/conftest.py`` owns the
+``--xla_force_host_platform_device_count=8`` setup (and asserts it took),
+so this module — like every other multi-device test — must NOT touch
+XLA_FLAGS itself; the old import-time assignment silently no-op'd whenever
+jax had already initialized.
+"""
 
+import jax
+import jax.numpy as jnp
 import pytest
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
 from repro.launch.mesh import make_mesh
 from repro.runtime.pipeline import pipeline_apply, reference_apply
 
-S, D, B, T = 4, 16, 8, 4
-mesh = make_mesh((S, 2), ("stage", "data"))
 
-def stage_fn(params, x):
+def _stage_fn(params, x):
     return jnp.tanh(x @ params["w"] + params["b"])
-
-key = jax.random.PRNGKey(0)
-params = {
-    "w": jax.random.normal(key, (S, D, D)) / jnp.sqrt(D),
-    "b": jnp.zeros((S, D)),
-}
-x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
-
-want = reference_apply(stage_fn, params, x)
-got = pipeline_apply(stage_fn, params, x, mesh=mesh, microbatches=T)
-err = float(jnp.abs(got - want).max())
-assert err < 1e-5, f"forward mismatch {err}"
-
-# gradient equivalence
-def loss_pipe(p):
-    return jnp.sum(pipeline_apply(stage_fn, p, x, mesh=mesh,
-                                  microbatches=T) ** 2)
-def loss_ref(p):
-    return jnp.sum(reference_apply(stage_fn, p, x) ** 2)
-
-g1 = jax.grad(loss_pipe)(params)
-g2 = jax.grad(loss_ref)(params)
-gerr = max(float(jnp.abs(a - b).max()) for a, b in
-           zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g2)))
-assert gerr < 1e-4, f"grad mismatch {gerr}"
-print("PIPELINE_OK", err, gerr)
-"""
 
 
 @pytest.mark.slow
 def test_gpipe_forward_and_grad_equivalence():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = SRC
-    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=420)
-    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
-    assert "PIPELINE_OK" in out.stdout
+    S, D, B, T = 4, 16, 8, 4
+    mesh = make_mesh((S, 2), ("stage", "data"))
+
+    key = jax.random.PRNGKey(0)
+    params = {
+        "w": jax.random.normal(key, (S, D, D)) / jnp.sqrt(D),
+        "b": jnp.zeros((S, D)),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+
+    want = reference_apply(_stage_fn, params, x)
+    got = pipeline_apply(_stage_fn, params, x, mesh=mesh, microbatches=T)
+    err = float(jnp.abs(got - want).max())
+    assert err < 1e-5, f"forward mismatch {err}"
+
+    def loss_pipe(p):
+        return jnp.sum(pipeline_apply(_stage_fn, p, x, mesh=mesh,
+                                      microbatches=T) ** 2)
+
+    def loss_ref(p):
+        return jnp.sum(reference_apply(_stage_fn, p, x) ** 2)
+
+    g1 = jax.grad(loss_pipe)(params)
+    g2 = jax.grad(loss_ref)(params)
+    gerr = max(float(jnp.abs(a - b).max()) for a, b in
+               zip(jax.tree_util.tree_leaves(g1),
+                   jax.tree_util.tree_leaves(g2)))
+    assert gerr < 1e-4, f"grad mismatch {gerr}"

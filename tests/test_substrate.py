@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
+
 from repro.checkpoint.checkpointing import CheckpointManager
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
 from repro.launch.mesh import make_mesh
@@ -221,6 +223,75 @@ def test_batch_axes_composite():
     spec = sh.logical_to_pspec(("batch", None), (64, 128), mesh,
                                sh.DEFAULT_RULES)
     assert spec[0] == ("pod", "data")
+
+
+def test_butterfly_axes_have_explicit_rules():
+    """Every logical axis the butterfly ParamSpecs use resolves through a
+    deliberate DEFAULT_RULES entry, not the unknown-name fallback."""
+    for name in sh.BUTTERFLY_AXES:
+        assert name in sh.DEFAULT_RULES
+
+
+_MESH_AXES = ("pod", "data", "model")
+
+
+def _spec_mesh_axes(spec):
+    """Flatten a PartitionSpec into the list of mesh-axis names it uses."""
+    out = []
+    for part in spec:
+        if part is None:
+            continue
+        out.extend((part,) if isinstance(part, str) else part)
+    return out
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    mesh_sizes=st.tuples(st.integers(1, 4), st.integers(1, 8),
+                         st.integers(1, 4)),
+    rules=st.fixed_dictionaries({
+        name: st.one_of(
+            st.none(),
+            st.sampled_from(_MESH_AXES),
+            st.lists(st.sampled_from(_MESH_AXES), min_size=1, max_size=3,
+                     unique=True).map(tuple))
+        # "batch" rides along so the mixed activation case below can
+        # actually exercise batch-vs-butterfly mesh-axis competition
+        for name in sh.BUTTERFLY_AXES + ("batch",)}),
+    stages=st.integers(1, 13),
+    n=st.integers(1, 64).map(lambda e: 1 << (e % 14)),
+    k_out=st.integers(1, 24),
+    k_in=st.integers(1, 24),
+)
+def test_logical_to_pspec_butterfly_properties(mesh_sizes, rules, stages, n,
+                                               k_out, k_in):
+    """For ANY rule set over the butterfly logical axes and ANY mesh shape:
+    a mesh axis appears at most once per spec, and the mesh-axis product
+    assigned to a dim always divides it (replicate instead of mis-shard)."""
+    mesh = _FakeMesh(dict(zip(_MESH_AXES, mesh_sizes)))
+    cases = [
+        (("stages", "butterfly_pair", "butterfly_n"), (stages, 2, n)),
+        (("butterfly_core_out", "butterfly_core_in"), (k_out, k_in)),
+        (("butterfly_bias",), (n,)),
+        # batch + butterfly mix, as in an activation spec
+        (("batch", "butterfly_n"), (k_out * 8, n)),
+    ]
+    for axes, shape in cases:
+        spec = sh.logical_to_pspec(axes, shape, mesh, rules)
+        used = _spec_mesh_axes(spec)
+        # uniqueness: no mesh axis twice in one spec
+        assert len(used) == len(set(used)), (spec, rules)
+        # all axes exist in the mesh
+        assert set(used) <= set(_MESH_AXES)
+        # divisibility: assigned product divides the dim (non-divisible
+        # dims must have dropped the axes)
+        for dim, part in zip(shape, tuple(spec) + (None,) * len(shape)):
+            parts = (() if part is None
+                     else ((part,) if isinstance(part, str) else part))
+            prod = 1
+            for a in parts:
+                prod *= mesh.shape[a]
+            assert dim % prod == 0, (axes, shape, spec, rules)
 
 
 def test_param_spec_tree_roundtrip():
