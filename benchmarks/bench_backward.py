@@ -41,7 +41,7 @@ def _tuned(kernel: str, n: int) -> str:
 
 def _butterfly_step(backend, c):
     def loss(x, w):
-        return jnp.vdot(c, ops.butterfly_apply(x, w, backend=backend))
+        return jnp.vdot(c, ops.butterfly_apply(x, w, context=backend))
 
     return jax.jit(jax.grad(loss, argnums=(0, 1)))
 
@@ -76,7 +76,7 @@ def _bench_sandwich(n: int, batch: int, iters: int, on_tpu: bool) -> None:
         def loss(x, b_in, core, b_out):
             return jnp.vdot(c, ops.sandwich_apply(
                 x, b_in, sel_in, core, sel_out, b_out,
-                scale_in=si, scale_out=so, backend=backend))
+                scale_in=si, scale_out=so, context=backend))
 
         fn = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))
         return lambda: fn(x, params["b_in"], params["core"], params["b_out"])

@@ -19,7 +19,7 @@ def run() -> None:
         x = jax.random.normal(jax.random.PRNGKey(1), (B, n))
         W = jax.random.normal(jax.random.PRNGKey(2), (n, n)) / jnp.sqrt(n)
 
-        bfly = jax.jit(lambda x: ops.butterfly_apply(x, w, backend="jnp"))
+        bfly = jax.jit(lambda x: ops.butterfly_apply(x, w, context="jnp"))
         dense = jax.jit(lambda x: x @ W.T)
         us_b = time_fn(bfly, x)
         us_d = time_fn(dense, x)

@@ -13,6 +13,7 @@ import jax
 import numpy as np
 
 from repro.core import encdec
+from repro.kernels import use_execution
 
 
 def main():
@@ -36,14 +37,17 @@ def main():
     print(f"FJLT+PCA (Prop. 4.1)    : {fjlt:.5f}")
     print(f"Theorem 1 prediction    : {pred:.5f}  (optimal loss, B frozen)")
 
-    print("\n-- phase 1: train (D,E), B frozen at FJLT init --")
-    p1, hist1 = encdec.train(spec, params, X, X, steps=500, lr=3e-3,
-                             train_B=False, log_every=100)
-    print("  losses:", [f"{v:.4f}" for v in hist1])
-    print("\n-- phase 2: fine-tune D, E and the butterfly B --")
-    p2, hist2 = encdec.train(spec, p1, X, X, steps=300, lr=1e-3,
-                             train_B=True, log_every=100)
-    print("  losses:", [f"{v:.4f}" for v in hist2])
+    # one ambient ExecutionContext covers both phases — swap "jnp" for
+    # "pallas" (TPU) or add mesh_shape=(8,) and nothing else changes
+    with use_execution("jnp"):
+        print("\n-- phase 1: train (D,E), B frozen at FJLT init --")
+        p1, hist1 = encdec.train(spec, params, X, X, steps=500, lr=3e-3,
+                                 train_B=False, log_every=100)
+        print("  losses:", [f"{v:.4f}" for v in hist1])
+        print("\n-- phase 2: fine-tune D, E and the butterfly B --")
+        p2, hist2 = encdec.train(spec, p1, X, X, steps=300, lr=1e-3,
+                                 train_B=True, log_every=100)
+        print("  losses:", [f"{v:.4f}" for v in hist2])
     final = float(encdec.loss_fn(spec, p2, X, X))
     print(f"\nfinal loss {final:.5f} vs PCA {pca:.5f} "
           f"(paper §5.2: ≈ Δ_k for all k)")

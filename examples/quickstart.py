@@ -2,8 +2,11 @@
 
 Run: ``PYTHONPATH=src python examples/quickstart.py``
 
-Shows (1) the parameter reduction, (2) Proposition 3.1 approximation at
-init, (3) trainability — the sandwich learns a random linear map.
+Shows, via the ``repro.nn.ButterflyLinear`` module API, (1) the parameter
+reduction, (2) Proposition 3.1 approximation at init (``from_dense``),
+(3) trainability — the sandwich learns a random linear map — and (4) the
+``ExecutionContext`` one-liner that would move the same layer onto another
+backend or an 8-device mesh.
 """
 
 import os
@@ -15,27 +18,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import layers as bl
+from repro import nn
+from repro.kernels import ExecutionContext, use_execution
 from repro.optim import optimizer as opt
 
 
 def main():
     n = 512
     print(f"== Butterfly sandwich replacing a dense {n}x{n} layer ==")
-    spec = bl.make_spec(jax.random.PRNGKey(0), n, n, k_in=64, k_out=64,
-                        use_bias=False)
-    print(f"dense params:     {bl.dense_param_count(n, n, False):,}")
-    print(f"butterfly params: {bl.param_count(spec):,} "
-          f"(k_in={spec.k_in}, k_out={spec.k_out})")
 
     # --- Proposition 3.1: approximate a given W at init ---
     W = np.random.default_rng(0).normal(size=(n, n)).astype(np.float32)
     W /= np.sqrt(n)
-    params = bl.init_from_dense(jax.random.PRNGKey(1), spec, jnp.asarray(W))
+    layer, params = nn.ButterflyLinear.from_dense(
+        jax.random.PRNGKey(0), jnp.asarray(W), k_in=64, k_out=64)
+    print(f"dense params:     {layer.dense_param_count():,}")
+    print(f"butterfly params: {layer.param_count():,} "
+          f"(k_in={layer.spec.k_in}, k_out={layer.spec.k_out})")
+
     x = np.random.default_rng(1).normal(size=(n,)).astype(np.float32)
     x /= np.linalg.norm(x)
-    approx = np.asarray(bl.butterfly_linear_apply(spec, params,
-                                                  jnp.asarray(x)))
+    approx = np.asarray(layer.apply(params, jnp.asarray(x)))
     err = np.linalg.norm(approx - W @ x) / np.linalg.norm(W, 2)
     print(f"init approximation error (k=64): {err:.3f} · ||W||")
 
@@ -44,8 +47,7 @@ def main():
     Y = X @ jnp.asarray(W).T
 
     def loss(p):
-        return jnp.mean(jnp.square(bl.butterfly_linear_apply(spec, p, X)
-                                   - Y))
+        return jnp.mean(jnp.square(layer.apply(p, X) - Y))
 
     tx = opt.adamw(3e-3)
     state = tx.init(params)
@@ -60,6 +62,16 @@ def main():
     for i in range(300):
         params, state = step(params, state)
     print(f"loss after 300 steps: {float(loss(params)):.5f}")
+
+    # --- execution policy is one object, not a kwarg pipeline ---
+    # per-call: layer.apply(params, x, context="pallas")   (on TPU)
+    # ambient:  everything in the block inherits the context
+    with use_execution(ExecutionContext(backend="jnp")):
+        y = layer.apply(params, jnp.asarray(x))
+    print(f"ambient-context apply matches: "
+          f"{bool(jnp.allclose(y, layer.apply(params, jnp.asarray(x))))}")
+    print("to shard the same layer over 8 devices: "
+          "use_execution(ExecutionContext(mesh_shape=(8,)))")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,14 @@ class ButterflyConfig:
 
     ``sites``: subset of {"lm_head", "mlp", "attn_out", "qkv"}.
     ``k_factor``: multiplies the paper's ``k = log2(n)`` choice.
+
+    The execution fields (``backend``, ``block_b``, ``segment``,
+    ``mesh_shape``) are the *config layer* of the
+    ``repro.kernels.context.ExecutionContext`` resolution order — lifted
+    via ``ExecutionContext.from_butterfly_config`` — so an explicit
+    per-call context or an ambient ``use_execution`` block overrides them
+    field-wise, and they in turn override the ``REPRO_*`` env vars:
+
     ``backend``: kernel path for the sandwich ("auto" | "jnp" | "pallas" |
     "pallas_interpret"); "auto" picks the fused Pallas kernels on TPU — for
     training too, now that they carry custom_vjp backward kernels.

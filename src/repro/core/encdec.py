@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import butterfly as bf
+from repro.kernels import context as exctx
 from repro.kernels import ops as kops
 from repro.optim import optimizer as opt
 
@@ -68,54 +69,55 @@ def init_params(key: jax.Array, spec: EncDecSpec) -> Dict[str, jnp.ndarray]:
 
 
 def apply_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray, *,
-            backend: kops.Backend = "auto",
-            block_b: Optional[int] = None,
-            segment: Optional[int] = None,
-            mesh=None, mesh_axes=None) -> jnp.ndarray:
+            context: exctx.ContextLike = None, **legacy) -> jnp.ndarray:
     """``B X`` for column-data ``X (n×d)`` -> (ℓ×d).
 
     The butterfly product dispatches through :mod:`repro.kernels.ops`; the
     fused Pallas path is differentiable (custom_vjp), so training through
     ``apply_B`` keeps the single-HBM-round-trip kernel in both directions.
-    ``block_b``/``segment`` default to the :mod:`repro.kernels.tuning`
-    autotuner. ``mesh`` shards the data columns (the batch dim of the
-    transposed product) over the mesh's data axes via
-    :mod:`repro.runtime.butterfly_sharding`.
+    Execution policy — backend, tile sizes, mesh — rides ``context``
+    (:mod:`repro.kernels.context`); a context with a mesh shards the data
+    columns (the batch dim of the transposed product) over its data axes via
+    :mod:`repro.runtime.butterfly_sharding`. The pre-context kwargs still
+    work via the deprecation shim and warn.
     """
+    context = exctx.apply_legacy(context, legacy, "apply_B")
     Xp = X
     if spec.pad_n != spec.n:
         Xp = jnp.pad(X, ((0, spec.pad_n - spec.n), (0, 0)))
-    H = kops.butterfly_apply(Xp.T, w, backend=backend, block_b=block_b,
-                             segment=segment, mesh=mesh,
-                             mesh_axes=mesh_axes)      # (d, pad_n)
+    H = kops.butterfly_apply(Xp.T, w, context=context)  # (d, pad_n)
     Ht = bf.truncate(H, spec.trunc_idx, spec.pad_n, spec.jl_scale)
     return Ht.T                                        # (ℓ, d)
 
 
 def forward(spec: EncDecSpec, params: Dict, X: jnp.ndarray, *,
-            backend: kops.Backend = "auto",
-            block_b: Optional[int] = None,
-            segment: Optional[int] = None,
-            mesh=None, mesh_axes=None) -> jnp.ndarray:
-    Xt = apply_B(spec, params["B"], X, backend=backend, block_b=block_b,
-                 segment=segment, mesh=mesh, mesh_axes=mesh_axes)
+            context: exctx.ContextLike = None, **legacy) -> jnp.ndarray:
+    context = exctx.apply_legacy(context, legacy, "forward")
+    Xt = apply_B(spec, params["B"], X, context=context)
     return params["D"] @ (params["E"] @ Xt)
 
 
 def loss_fn(spec: EncDecSpec, params: Dict, X: jnp.ndarray,
             Y: jnp.ndarray, *,
-            backend: kops.Backend = "auto",
-            block_b: Optional[int] = None,
-            segment: Optional[int] = None,
-            mesh=None, mesh_axes=None) -> jnp.ndarray:
-    Yb = forward(spec, params, X, backend=backend, block_b=block_b,
-                 segment=segment, mesh=mesh, mesh_axes=mesh_axes)
+            context: exctx.ContextLike = None, **legacy) -> jnp.ndarray:
+    context = exctx.apply_legacy(context, legacy, "loss_fn")
+    Yb = forward(spec, params, X, context=context)
     return jnp.sum(jnp.square(Yb - Y))
 
 
 # ---------------------------------------------------------------------------
 # Theory: Σ(B), Theorem 1 prediction, closed-form optimum for fixed B
 # ---------------------------------------------------------------------------
+
+def _pinv(G: jnp.ndarray) -> jnp.ndarray:
+    """Moore-Penrose with a 1e-6 relative cutoff. jax >= 0.4.32 spells the
+    cutoff ``rtol`` and deprecates ``rcond`` (a DeprecationWarning the CI
+    examples step escalates to an error); older jax only knows ``rcond``."""
+    try:
+        return jnp.linalg.pinv(G, rtol=1e-6)
+    except TypeError:
+        return jnp.linalg.pinv(G, rcond=1e-6)
+
 
 def sigma_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray,
             Y: jnp.ndarray) -> jnp.ndarray:
@@ -125,7 +127,7 @@ def sigma_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray,
     # pinv: when rank(X) < ℓ the Gram matrix is singular (Theorem 1's
     # assumption (a) fails); Moore-Penrose still yields the projection form
     # Σ(B) = Y Π_rowspace(X̃) Yᵀ, which is what the loss geometry uses.
-    Ginv = jnp.linalg.pinv(G, rcond=1e-6)
+    Ginv = _pinv(G)
     M = Y @ Xt.T
     return M @ Ginv @ M.T
 
@@ -145,7 +147,7 @@ def optimal_DE(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray,
     ``D = U_k``, ``E = U_kᵀ Y X̃ᵀ (X̃X̃ᵀ)^{-1}``, U_k = top-k eigvecs of Σ(B)."""
     Xt = apply_B(spec, w, X)
     G = Xt @ Xt.T
-    Ginv = jnp.linalg.pinv(G, rcond=1e-6)
+    Ginv = _pinv(G)
     S = sigma_B(spec, w, X, Y)
     lam, U = jnp.linalg.eigh(S)
     Uk = U[:, ::-1][:, : spec.k]
@@ -195,24 +197,21 @@ def fjlt_pca_loss(key: jax.Array, X: jnp.ndarray, k: int, ell: int
 def train(spec: EncDecSpec, params: Dict, X: jnp.ndarray, Y: jnp.ndarray,
           steps: int, lr: float = 1e-3, train_B: bool = True,
           log_every: int = 0,
-          backend: kops.Backend = "auto",
-          block_b: Optional[int] = None,
-          segment: Optional[int] = None,
-          mesh=None, mesh_axes=None) -> Tuple[Dict, list]:
+          context: exctx.ContextLike = None, **legacy) -> Tuple[Dict, list]:
     """Full-batch Adam on the reconstruction loss.
 
     ``train_B=False`` freezes the butterfly (phase 1 of two-phase learning).
-    ``backend`` selects the butterfly kernel path — on TPU the fused Pallas
-    kernel runs in the gradient too (custom_vjp); ``block_b``/``segment``
-    tune its tiles (``None`` = autotuned); ``mesh`` data-shards the
-    butterfly product across devices. Returns (params, loss history).
+    ``context`` carries the kernel execution policy — on TPU the fused
+    Pallas kernel runs in the gradient too (custom_vjp); unset tile knobs
+    are autotuned; a context with a mesh data-shards the butterfly product
+    across devices. Returns (params, loss history).
     """
+    context = exctx.apply_legacy(context, legacy, "train")
     tx = opt.adamw(lr)
     state = tx.init(params)
 
     def masked_loss(p):
-        return loss_fn(spec, p, X, Y, backend=backend, block_b=block_b,
-                       segment=segment, mesh=mesh, mesh_axes=mesh_axes)
+        return loss_fn(spec, p, X, Y, context=context)
 
     @jax.jit
     def step(params, state):
@@ -234,12 +233,13 @@ def train(spec: EncDecSpec, params: Dict, X: jnp.ndarray, Y: jnp.ndarray,
 def train_two_phase(spec: EncDecSpec, params: Dict, X: jnp.ndarray,
                     Y: jnp.ndarray, steps1: int, steps2: int,
                     lr: float = 1e-3, log_every: int = 0,
-                    backend: kops.Backend = "auto"
+                    context: exctx.ContextLike = None, **legacy
                     ) -> Tuple[Dict, list, list]:
     """§5.3: phase 1 trains (D, E) with B frozen at its FJLT init (Theorem 1
     guarantees local = global here); phase 2 fine-tunes all three."""
+    context = exctx.apply_legacy(context, legacy, "train_two_phase")
     params, h1 = train(spec, params, X, Y, steps1, lr=lr, train_B=False,
-                       log_every=log_every, backend=backend)
+                       log_every=log_every, context=context)
     params, h2 = train(spec, params, X, Y, steps2, lr=lr, train_B=True,
-                       log_every=log_every, backend=backend)
+                       log_every=log_every, context=context)
     return params, h1, h2

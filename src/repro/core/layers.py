@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import butterfly as bf
+from repro.kernels import context as exctx
 from repro.kernels import ops as kops
 
 __all__ = [
@@ -130,14 +131,24 @@ def init_from_dense(key: jax.Array, spec: ButterflySpec, W: jnp.ndarray,
     return params
 
 
-@functools.lru_cache(maxsize=None)
+# Bounded: each entry holds two dense (k, N) numpy matrices, so an unbounded
+# cache grows without limit in a long-lived process that keeps creating
+# fresh specs (many sites x many models x hyperparameter sweeps). 128 specs
+# comfortably covers every site of the largest assigned config; eviction
+# only costs a rebuild on the next trace.
+SELECTION_CACHE_SIZE = 128
+
+
+@functools.lru_cache(maxsize=SELECTION_CACHE_SIZE)
 def _selection_matrices(spec: ButterflySpec):
     """Fixed one-hot truncate/scatter matrices for the fused kernel path.
 
     Cached per spec (hashable, truncation indices are frozen at init) so the
-    matrices become jit-time constants instead of being rebuilt per call.
-    Cached as *numpy* — this function runs inside jit traces, and caching a
-    trace-created jax array would leak a tracer into later traces.
+    matrices become jit-time constants instead of being rebuilt per call —
+    including across jit retraces, which re-enter this function with an
+    equal spec and must hit. Cached as *numpy* — this function runs inside
+    jit traces, and caching a trace-created jax array would leak a tracer
+    into later traces.
     """
     from repro.kernels.sandwich import one_hot_select_np
     sel_in = one_hot_select_np(spec.idx_in, spec.pad_in)
@@ -147,35 +158,45 @@ def _selection_matrices(spec: ButterflySpec):
 
 def butterfly_linear_apply(spec: ButterflySpec, params: dict,
                            x: jnp.ndarray, *,
-                           backend: kops.Backend = "auto",
-                           block_b: Optional[int] = None,
-                           segment: Optional[int] = None,
-                           mesh=None, mesh_axes=None) -> jnp.ndarray:
+                           context: exctx.ContextLike = None,
+                           **legacy) -> jnp.ndarray:
     """Apply the sandwich along the last axis: (..., n_in) -> (..., n_out).
 
-    ``backend`` selects the kernel path (see :mod:`repro.kernels.ops`):
-    ``jnp`` runs the unfused reference ops below; ``pallas`` runs the fused
-    sandwich kernel — differentiable in both activations and weights via its
-    custom_vjp — and ``auto`` picks per platform. ``block_b``/``segment``
-    (Pallas tile rows and backward checkpoint interval) default to the
-    :mod:`repro.kernels.tuning` autotuner. ``mesh`` batch-shards the whole
-    layer (padding, kernel, bias) over the mesh's data axes with replicated
-    weights and psum'd weight grads (:mod:`repro.runtime.butterfly_sharding`).
+    Execution policy rides ``context`` (an
+    :class:`~repro.kernels.context.ExecutionContext`, a backend string, or
+    ``None`` — see :mod:`repro.kernels.context` for the resolution order):
+    the ``jnp`` backend runs the unfused reference ops below; the Pallas
+    backends run the fused sandwich kernel — differentiable in both
+    activations and weights via its custom_vjp. Unset tile knobs defer to
+    the :mod:`repro.kernels.tuning` autotuner. A context with a mesh
+    batch-shards the whole layer (padding, kernel, bias) over the mesh's
+    data axes with replicated weights and psum'd weight grads
+    (:mod:`repro.runtime.butterfly_sharding`). The pre-context kwargs still
+    work via the deprecation shim and warn.
     """
     if x.shape[-1] != spec.n_in:
         raise ValueError(f"expected last dim {spec.n_in}, got {x.shape[-1]}")
-    route = kops._sharded_route(mesh, mesh_axes)
+    ctx = exctx.resolve_execution(
+        exctx.apply_legacy(context, legacy, "butterfly_linear_apply"))
+    route = kops._sharded_route(ctx)
     if route is not None:
         bsh, axes = route
-        return bsh.sharded_butterfly_linear_apply(
-            spec, params, x, mesh=mesh, axes=axes, backend=backend,
-            block_b=block_b, segment=segment)
-    resolved = kops.resolve_backend(backend)
+        return bsh.sharded_butterfly_linear_apply(spec, params, x,
+                                                  context=ctx, axes=axes)
+    return _local_linear_apply(spec, params, x, ctx)
+
+
+def _local_linear_apply(spec: ButterflySpec, params: dict, x: jnp.ndarray,
+                        ctx: "exctx.ExecutionContext") -> jnp.ndarray:
+    """Single-device sandwich layer on a *finalized* context: no
+    resolution, no mesh routing — the shard_map region closure in
+    :mod:`repro.runtime.butterfly_sharding` runs this per shard, so an
+    ambient mesh context can never re-route it."""
     # pad to power of two
     if spec.pad_in != spec.n_in:
         pad = [(0, 0)] * (x.ndim - 1) + [(0, spec.pad_in - spec.n_in)]
         x = jnp.pad(x, pad)
-    if resolved == "jnp":
+    if ctx.backend == "jnp":
         h = bf.butterfly_apply(params["b_in"].astype(x.dtype), x)
         h = bf.truncate(h, spec.idx_in, spec.pad_in, spec.jl_scale)  # (.., k1)
         h = jnp.einsum("...i,oi->...o", h, params["core"].astype(x.dtype))
@@ -188,11 +209,10 @@ def butterfly_linear_apply(spec: ButterflySpec, params: dict,
                     if spec.jl_scale else 1.0)
         scale_out = (math.sqrt(spec.pad_out / spec.k_out)
                      if spec.jl_scale else 1.0)
-        z = kops.sandwich_apply(x, params["b_in"], sel_in, params["core"],
-                                sel_out, params["b_out"],
-                                scale_in=scale_in, scale_out=scale_out,
-                                backend=resolved, block_b=block_b,
-                                segment=segment)
+        z = kops._local_sandwich(x, params["b_in"], sel_in, params["core"],
+                                 sel_out, params["b_out"],
+                                 scale_in=scale_in, scale_out=scale_out,
+                                 ctx=ctx.local())
     if spec.pad_out != spec.n_out:
         z = z[..., : spec.n_out]
     if spec.use_bias and "bias" in params:

@@ -1,12 +1,18 @@
 """Fused Pallas kernels for the paper's compute hot-spots.
 
-``repro.kernels.ops`` is the public, backend-dispatched entry point; the
+``repro.kernels.ops`` is the public, backend-dispatched entry point and
+``repro.kernels.context`` the execution-policy object it dispatches on; the
 per-kernel modules (``butterfly``, ``sandwich``, ``flash``) hold the kernel
 bodies and ``repro.kernels.ref`` the pure-jnp oracles.
 """
 
-from repro.kernels.ops import (Backend, butterfly_apply, one_hot_select,
-                               resolve_backend, sandwich_apply)
+from repro.kernels.context import (Backend, ExecutionContext,
+                                   clear_backend_cache, current_execution,
+                                   resolve_backend, resolve_execution,
+                                   use_execution)
+from repro.kernels.ops import butterfly_apply, one_hot_select, sandwich_apply
 
-__all__ = ["Backend", "butterfly_apply", "one_hot_select",
-           "resolve_backend", "sandwich_apply"]
+__all__ = ["Backend", "ExecutionContext", "butterfly_apply",
+           "clear_backend_cache", "current_execution", "one_hot_select",
+           "resolve_backend", "resolve_execution", "sandwich_apply",
+           "use_execution"]

@@ -1,146 +1,132 @@
 """Public jit'd entry points for the Pallas kernels.
 
-Backend selection (``auto`` | ``jnp`` | ``pallas`` | ``pallas_interpret``):
+Execution policy — backend, Pallas tile sizes, mesh — is carried by one
+object, :class:`repro.kernels.context.ExecutionContext`, passed as the
+``context=`` argument (an :class:`ExecutionContext`, a bare backend string,
+or ``None``) or installed ambiently with ``with use_execution(ctx):``. The
+resolution order is context > ambient > config default > ``REPRO_*`` env >
+autotune/platform; see :mod:`repro.kernels.context`.
 
-* On TPU ``auto`` resolves to the compiled Pallas kernels (Mosaic) — for
+* On TPU the default resolves to the compiled Pallas kernels (Mosaic) — for
   inference *and* training: every fused kernel carries a
   :func:`jax.custom_vjp` with a fused Pallas backward pass, so ``jax.grad``
-  through these entry points stays on the fast path instead of falling back
-  to log n unfused HBM round trips per stage.
-* On CPU (this container) ``auto`` resolves to the *pure-jnp oracles*
-  (Pallas interpret mode executes the kernel body in Python — correct but
-  slow), while tests explicitly request ``backend="pallas_interpret"`` to
-  validate the kernel bodies — forward and backward — themselves.
-* ``REPRO_KERNEL_BACKEND`` in the environment overrides what ``auto``
-  resolves to (read at trace time), e.g. to force the oracle path on TPU
-  when bisecting a kernel bug.
+  through these entry points stays on the fast path.
+* On CPU (this container) the default resolves to the *pure-jnp oracles*,
+  while tests request ``context="pallas_interpret"`` to execute the kernel
+  bodies — forward and backward — in Python without hardware.
+* A context with ``mesh_shape``/``mesh`` routes the call through
+  :mod:`repro.runtime.butterfly_sharding`: activations batch-sharded via
+  ``shard_map``, stage weights replicated, weight gradients psum'd through
+  the fused custom_vjp backward.
+* ``block_b``/``segment`` left unset defer to the
+  :mod:`repro.kernels.tuning` VMEM/roofline autotuner.
 
-Block sizes: the Pallas entry points take optional ``block_b`` (batch-tile
-rows) and ``segment`` (backward checkpoint interval) knobs. ``None`` — the
-default everywhere — defers to the :mod:`repro.kernels.tuning` VMEM/roofline
-autotuner, so callers never pass magic numbers; explicit ints override it
-(as do the ``REPRO_TUNE_*`` env vars, see ``tuning.py``).
-
-Multi-device: every entry point takes an optional ``mesh`` (plus
-``mesh_axes``, default ``("pod", "data")`` filtered to the mesh). When given
-a mesh with a non-trivial data axis, the call routes through
-:mod:`repro.runtime.butterfly_sharding`: activations batch-sharded via
-``shard_map``, stage weights replicated, weight gradients psum'd through the
-fused custom_vjp backward. ``mesh=None`` (the default) is the single-device
-path, bit-identical to before.
+The pre-context loose kwargs (``backend=``, ``block_b=``, ``segment=``,
+``mesh=``, ``mesh_axes=``) still work for one release via the deprecation
+shim (:func:`repro.kernels.context.apply_legacy`) and warn.
 """
 
 from __future__ import annotations
 
-import os
-from typing import Literal, Optional, Sequence
-
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
 
+from repro.kernels import context as exctx
 from repro.kernels import ref as _ref
 from repro.kernels.butterfly import butterfly_matmul as _butterfly_pallas
+from repro.kernels.context import (Backend, ExecutionContext,
+                                   clear_backend_cache, resolve_backend,
+                                   use_execution)
 from repro.kernels.sandwich import sandwich_matmul as _sandwich_pallas
 from repro.kernels.sandwich import one_hot_select
 
-Backend = Literal["auto", "jnp", "pallas", "pallas_interpret"]
 
-_CONCRETE = ("jnp", "pallas", "pallas_interpret")
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def resolve_backend(backend: Backend = "auto") -> str:
-    """Resolve ``auto`` to a concrete backend (env override, then platform)."""
-    if backend == "auto":
-        env = os.environ.get("REPRO_KERNEL_BACKEND", "").strip().lower()
-        if env and env != "auto":
-            backend = env
-        else:
-            backend = "pallas" if _on_tpu() else "jnp"
-    if backend not in _CONCRETE:
-        raise ValueError(f"unknown kernel backend {backend!r}; expected one "
-                         f"of {('auto',) + _CONCRETE}")
-    return backend
-
-
-def _sharded_route(mesh: Optional[Mesh], mesh_axes: Optional[Sequence[str]]):
-    """Resolve the (mesh, axes) pair to shard over, or None for the local
-    path. Imported lazily: runtime.butterfly_sharding wraps these entry
-    points, so a top-level import would be circular."""
-    if mesh is None:
+def _sharded_route(ctx: ExecutionContext):
+    """Resolve a finalized context to (sharding module, axes) when it asks
+    for (and the mesh supports) multi-device execution, else None. Imported
+    lazily: runtime.butterfly_sharding wraps these entry points, so a
+    top-level import would be circular."""
+    if ctx.mesh is None:
         return None
     from repro.runtime import butterfly_sharding as bsh
-    axes = bsh.data_axes(mesh, mesh_axes)
+    axes = bsh.data_axes(ctx.mesh, ctx.mesh_axes)
     return (bsh, axes) if axes else None
+
+
+def _local_butterfly(x: jnp.ndarray, w: jnp.ndarray, *, transpose: bool,
+                     ctx: ExecutionContext) -> jnp.ndarray:
+    """Single-device dispatch on a *finalized* context: no resolution, no
+    mesh routing. The shard_map region closures in
+    :mod:`repro.runtime.butterfly_sharding` call this directly so an
+    ambient mesh context can never re-route a call that is already inside
+    its own shard."""
+    if ctx.backend == "jnp":
+        return _ref.butterfly_ref(w.astype(x.dtype), x, transpose=transpose)
+    with use_execution(ctx):  # tuning overrides (vmem_budget) see the ctx
+        return _butterfly_pallas(x, w, transpose=transpose,
+                                 block_b=ctx.block_b, segment=ctx.segment,
+                                 interpret=ctx.backend == "pallas_interpret")
 
 
 def butterfly_apply(x: jnp.ndarray, w: jnp.ndarray, *,
                     transpose: bool = False,
-                    backend: Backend = "auto",
-                    block_b: Optional[int] = None,
-                    segment: Optional[int] = None,
-                    mesh: Optional[Mesh] = None,
-                    mesh_axes: Optional[Sequence[str]] = None
-                    ) -> jnp.ndarray:
+                    context: exctx.ContextLike = None,
+                    **legacy) -> jnp.ndarray:
     """Fused butterfly product over the last axis of ``x``.
 
     Differentiable under every backend; the Pallas backends use the fused
-    custom_vjp backward kernel with segmented stage checkpointing.
-    ``block_b``/``segment`` default to the autotuner (``tuning.py``).
-    ``mesh`` batch-shards the call over its data axes (module docstring).
+    custom_vjp backward kernel with segmented stage checkpointing. All
+    execution knobs ride ``context`` (module docstring); a context with a
+    mesh batch-shards the call over its data axes.
     """
-    backend = resolve_backend(backend)
-    route = _sharded_route(mesh, mesh_axes)
+    ctx = exctx.resolve_execution(
+        exctx.apply_legacy(context, legacy, "butterfly_apply"))
+    route = _sharded_route(ctx)
     if route is not None:
         bsh, axes = route
-        return bsh.sharded_butterfly_apply(x, w, mesh=mesh, axes=axes,
-                                           transpose=transpose,
-                                           backend=backend, block_b=block_b,
-                                           segment=segment)
-    if backend == "jnp":
-        return _ref.butterfly_ref(w.astype(x.dtype), x, transpose=transpose)
-    interpret = backend == "pallas_interpret"
-    return _butterfly_pallas(x, w, transpose=transpose, block_b=block_b,
-                             segment=segment, interpret=interpret)
+        return bsh.sharded_butterfly_apply(x, w, context=ctx, axes=axes,
+                                           transpose=transpose)
+    return _local_butterfly(x, w, transpose=transpose, ctx=ctx)
 
 
 def sandwich_apply(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
                    core: jnp.ndarray, sel_out: jnp.ndarray,
                    b_out: jnp.ndarray, *, scale_in: float = 1.0,
                    scale_out: float = 1.0,
-                   backend: Backend = "auto",
-                   block_b: Optional[int] = None,
-                   segment: Optional[int] = None,
-                   mesh: Optional[Mesh] = None,
-                   mesh_axes: Optional[Sequence[str]] = None) -> jnp.ndarray:
+                   context: exctx.ContextLike = None,
+                   **legacy) -> jnp.ndarray:
     """Fused butterfly sandwich (dense-layer replacement) over the last axis.
 
     Differentiable under every backend; the Pallas backends use the fused
-    custom_vjp backward kernel with segmented stage checkpointing.
-    ``block_b``/``segment`` default to the autotuner (``tuning.py``).
-    ``mesh`` batch-shards the call over its data axes (module docstring).
+    custom_vjp backward kernel with segmented stage checkpointing. All
+    execution knobs ride ``context`` (module docstring).
     """
-    backend = resolve_backend(backend)
-    route = _sharded_route(mesh, mesh_axes)
+    ctx = exctx.resolve_execution(
+        exctx.apply_legacy(context, legacy, "sandwich_apply"))
+    route = _sharded_route(ctx)
     if route is not None:
         bsh, axes = route
         return bsh.sharded_sandwich_apply(
-            x, b_in, sel_in, core, sel_out, b_out, mesh=mesh, axes=axes,
-            scale_in=scale_in, scale_out=scale_out, backend=backend,
-            block_b=block_b, segment=segment)
-    if backend == "jnp":
+            x, b_in, sel_in, core, sel_out, b_out, context=ctx, axes=axes,
+            scale_in=scale_in, scale_out=scale_out)
+    return _local_sandwich(x, b_in, sel_in, core, sel_out, b_out,
+                           scale_in=scale_in, scale_out=scale_out, ctx=ctx)
+
+
+def _local_sandwich(x, b_in, sel_in, core, sel_out, b_out, *,
+                    scale_in: float, scale_out: float,
+                    ctx: ExecutionContext) -> jnp.ndarray:
+    """Single-device sandwich dispatch on a finalized context (see
+    :func:`_local_butterfly`)."""
+    if ctx.backend == "jnp":
         return _ref.sandwich_ref(x, b_in, core, b_out, sel_in, sel_out,
                                  scale_in, scale_out)
-    interpret = backend == "pallas_interpret"
-    return _sandwich_pallas(x, b_in, sel_in, core, sel_out, b_out,
-                            scale_in=scale_in, scale_out=scale_out,
-                            block_b=block_b, segment=segment,
-                            interpret=interpret)
+    with use_execution(ctx):
+        return _sandwich_pallas(x, b_in, sel_in, core, sel_out, b_out,
+                                scale_in=scale_in, scale_out=scale_out,
+                                block_b=ctx.block_b, segment=ctx.segment,
+                                interpret=ctx.backend == "pallas_interpret")
 
 
 __all__ = ["butterfly_apply", "sandwich_apply", "one_hot_select", "Backend",
-           "resolve_backend"]
+           "ExecutionContext", "use_execution", "resolve_backend",
+           "clear_backend_cache"]

@@ -20,15 +20,21 @@ the roofline constants of :mod:`repro.launch.roofline`:
   over ``HBM_BW``; reported in :class:`KernelChoice` so benchmarks and the
   trainer can record *why* a block size was picked.
 
-Choices are cached (``functools.lru_cache``) and env-overridable:
+Choices are cached (``functools.lru_cache``) and overridable. The override
+order matches :mod:`repro.kernels.context`: an explicit value (from an
+:class:`~repro.kernels.context.ExecutionContext` or config) beats the
+ambient context, which beats the env vars, which beat the model:
 
 * ``REPRO_TUNE_BLOCK_B``   — force a batch-tile row count for butterfly and
-  sandwich kernels.
-* ``REPRO_TUNE_SEGMENT``   — force the backward checkpoint segment length.
-* ``REPRO_TUNE_BLOCK_Q``   — force the flash-attention q/kv block size.
-* ``REPRO_TUNE_VMEM_BUDGET`` — VMEM budget in bytes (default: 75% of 16 MB).
+  sandwich kernels (``ExecutionContext.block_b`` beats it).
+* ``REPRO_TUNE_SEGMENT``   — force the backward checkpoint segment length
+  (``ExecutionContext.segment`` beats it).
+* ``REPRO_TUNE_BLOCK_Q``   — force the flash-attention q/kv block size
+  (ambient ``ExecutionContext.flash_block_q`` beats it).
+* ``REPRO_TUNE_VMEM_BUDGET`` — VMEM budget in bytes (default: 75% of 16 MB;
+  ambient ``ExecutionContext.vmem_budget`` beats it).
 
-Callers never pass magic numbers: ``block_b=None`` anywhere in
+Callers never pass magic numbers: an unset knob anywhere in
 :mod:`repro.kernels.ops`, :mod:`repro.core.layers`, :mod:`repro.core.encdec`
 or :class:`repro.configs.base.ButterflyConfig` means "ask the autotuner".
 """
@@ -44,6 +50,7 @@ from typing import Dict, Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core.butterfly import num_stages
+from repro.kernels import context as exctx
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS, VMEM_BYTES
 
 __all__ = [
@@ -89,7 +96,15 @@ class KernelChoice:
 
 
 def vmem_budget() -> int:
-    """VMEM bytes the footprint model may spend (env-overridable)."""
+    """VMEM bytes the footprint model may spend.
+
+    Override order: ambient :class:`~repro.kernels.context.ExecutionContext`
+    (``vmem_budget`` field), then ``REPRO_TUNE_VMEM_BUDGET``, then 75% of
+    the roofline VMEM constant.
+    """
+    ctx = exctx.current_execution()
+    if ctx is not None and ctx.vmem_budget is not None:
+        return int(ctx.vmem_budget)
     env = os.environ.get("REPRO_TUNE_VMEM_BUDGET", "").strip()
     if env:
         return int(env)
@@ -237,9 +252,14 @@ def flash_blocks(seq_len: int, head_dim: int, dtype_name: str,
     The kernels keep the full K/V (and in backward dO/lse/delta) rows of one
     (batch·head) resident; block_q only controls the per-step tile, so pick
     the largest power of two dividing S whose q-side tiles fit what is left
-    of the budget after the sequence-length-resident buffers. Env overrides
-    are read here, outside the cache, so they always win.
+    of the budget after the sequence-length-resident buffers. Overrides —
+    the ambient ``ExecutionContext.flash_block_q``, then the env var — are
+    read here, outside the cache, so they always win.
     """
+    ctx = exctx.current_execution()
+    if ctx is not None and ctx.flash_block_q is not None:
+        bq = int(ctx.flash_block_q)
+        return bq, bq
     env = os.environ.get("REPRO_TUNE_BLOCK_Q", "").strip()
     if env:
         bq = int(env)

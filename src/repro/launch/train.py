@@ -123,7 +123,8 @@ def main():
     print(f"[train] done: loss {np.mean(result.losses[:5]):.4f} → "
           f"{np.mean(result.losses[-5:]):.4f}; "
           f"median step {np.median(result.step_times) * 1e3:.0f} ms"
-          + (f"; mesh {result.mesh_layout}" if result.mesh_layout else "")
+          # the resolved ExecutionContext of the run (backend, tiles, mesh)
+          + f"; exec [{result.execution.describe()}]"
           + (f"; resumed from step {result.resumed_from}"
              if result.resumed_from else ""))
 

@@ -18,10 +18,11 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import nn as bnn
 from repro.configs.base import ModelConfig
 from repro.core import butterfly as bfly
 from repro.core import layers as blayers
-from repro.runtime import sharding as rsharding
+from repro.kernels import context as exctx
 from repro.runtime.pytree import ParamSpec
 from repro.runtime.sharding import constrain
 
@@ -79,19 +80,15 @@ def linear_specs(cfg: ModelConfig, n_in: int, n_out: int,
                            scale=scale, fan_in_dim=0)}
 
 
-def _butterfly_mesh(cfg: ModelConfig):
-    """Mesh for sharded butterfly sites: only when the model opts in via
-    ``ButterflyConfig.mesh_shape``. Prefers the active sharding context's
-    mesh (the Trainer installs one built from that same shape); otherwise
-    builds it from the config."""
-    bc = cfg.butterfly
-    if bc is None or bc.mesh_shape is None:
-        return None
-    ctx = rsharding.active_ctx()
-    if ctx is not None and ctx.mesh is not None:
-        return ctx.mesh
-    from repro.launch.mesh import butterfly_mesh
-    return butterfly_mesh(bc.mesh_shape)
+@functools.lru_cache(maxsize=None)
+def _site_module(spec: blayers.ButterflySpec, bc) -> "bnn.ButterflyLinear":
+    """The :class:`repro.nn.ButterflyLinear` facade for one site. The
+    config's execution fields ride the module as its default context — the
+    config layer of the resolution order, so an ambient ``use_execution``
+    (the Trainer installs one) still wins. Cached per (spec, config) so the
+    module object is a stable jit-time constant."""
+    ctx = exctx.ExecutionContext.from_butterfly_config(bc)
+    return bnn.ButterflyLinear(spec=spec, context=ctx)
 
 
 def linear_apply(cfg: ModelConfig, params: Dict, x: jnp.ndarray,
@@ -103,11 +100,7 @@ def linear_apply(cfg: ModelConfig, params: Dict, x: jnp.ndarray,
     bc = cfg.butterfly
     spec = site_butterfly_spec(bc.seed, site_key or site, n_in,
                                int(n_out), bc.k_factor, bc.use_bias)
-    return blayers.butterfly_linear_apply(spec, params, x,
-                                          backend=bc.backend,
-                                          block_b=bc.block_b,
-                                          segment=bc.segment,
-                                          mesh=_butterfly_mesh(cfg))
+    return _site_module(spec, bc).apply(params, x)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,13 @@
+"""``repro.nn`` — drop-in module facade for the paper's butterfly layers.
+
+The ergonomic bar is HazyResearch's ``torch_butterfly.Butterfly`` /
+Pixelated Butterfly: an ``nn.Linear``-compatible *object*, not a kwarg
+pipeline. :class:`ButterflyLinear` is that object for this codebase —
+``create`` / ``init`` / ``apply`` / ``from_dense`` over the §3.2 butterfly
+sandwich, arbitrary (non-power-of-two) in/out dims, execution policy via
+:class:`repro.kernels.context.ExecutionContext`.
+"""
+
+from repro.nn.linear import ButterflyLinear, SandwichLinear
+
+__all__ = ["ButterflyLinear", "SandwichLinear"]

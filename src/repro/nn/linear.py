@@ -1,0 +1,162 @@
+"""Module-style facade over the butterfly sandwich (paper §3.2).
+
+The repo's core API is functional — a hashable :class:`ButterflySpec` plus a
+params dict — which composes with jit but makes the "drop-in dense
+replacement" pitch a four-step dance. :class:`ButterflyLinear` packages the
+dance: the spec, the init, the apply, the dense distillation, and a default
+:class:`~repro.kernels.context.ExecutionContext`, in one frozen object that
+is itself hashable (safe to close over in jit, cacheable).
+
+Usage::
+
+    layer = nn.ButterflyLinear.create(key, n_in=300, n_out=100)
+    params = layer.init(key2)
+    y = layer.apply(params, x)                  # == layer(params, x)
+
+    # approximate an existing dense layer at init (Proposition 3.1)
+    layer, params = nn.ButterflyLinear.from_dense(key, W, bias=b)
+
+    # execution policy: per-layer default, ambient, or per-call
+    layer = nn.ButterflyLinear.create(key, 512, 512, context="pallas")
+    with use_execution(ExecutionContext(mesh_shape=(8,))):
+        y = layer.apply(params, x)              # batch-sharded over 8 devices
+
+The layer accepts arbitrary ``n_in``/``n_out`` — non-powers-of-two are
+zero-padded to the enclosing power of two by the spec's pad logic and sliced
+back, exactly like the underlying
+:func:`repro.core.layers.butterfly_linear_apply` (which ``apply`` matches
+bit-for-bit; gated in ``tests/test_nn.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as blayers
+from repro.kernels import context as exctx
+
+__all__ = ["ButterflyLinear", "SandwichLinear"]
+
+
+@dataclass(frozen=True)
+class ButterflyLinear:
+    """Drop-in dense-layer replacement: ``(..., n_in) -> (..., n_out)``.
+
+    Internally the paper's butterfly sandwich ``J2ᵀ · W' · J1`` with the
+    paper's default core size ``k = log2(n)`` (see :class:`SandwichLinear`
+    for explicit core dims). ``context`` is the layer's default execution
+    policy; it sits at the *config* layer of the resolution order, so an
+    ambient ``with use_execution(...):`` and a per-call ``context=`` both
+    override it field-wise.
+    """
+
+    spec: blayers.ButterflySpec
+    context: Optional[exctx.ExecutionContext] = None
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def create(cls, key: jax.Array, n_in: int, n_out: int, *,
+               k_in: Optional[int] = None, k_out: Optional[int] = None,
+               k_factor: float = 1.0, use_bias: bool = True,
+               context: exctx.ContextLike = None) -> "ButterflyLinear":
+        """New layer with FJLT-initialized truncation indices.
+
+        ``k_in``/``k_out`` default to the paper's ``k = log2(n)`` choice
+        scaled by ``k_factor``; ``key`` only fixes the (static) truncation
+        index sets — weights come from :meth:`init`.
+        """
+        spec = blayers.make_spec(key, n_in, n_out, k_in=k_in, k_out=k_out,
+                                 k_factor=k_factor, use_bias=use_bias)
+        return cls(spec=spec, context=exctx.ExecutionContext.coerce(context))
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> dict:
+        """Fresh trainable params: FJLT butterflies + kaiming-uniform core
+        (+ zero bias when the spec has one)."""
+        return blayers.init_butterfly_linear(key, self.spec, dtype=dtype)
+
+    @classmethod
+    def from_dense(cls, key: jax.Array, W: jnp.ndarray, *,
+                   bias: Optional[jnp.ndarray] = None,
+                   k_in: Optional[int] = None, k_out: Optional[int] = None,
+                   k_factor: float = 1.0, dtype=jnp.float32,
+                   context: exctx.ContextLike = None
+                   ) -> tuple["ButterflyLinear", dict]:
+        """Distill a dense ``W (n_out × n_in)`` into a sandwich at init.
+
+        Proposition 3.1: with FJLT butterflies and core ``W' = J2 W J1ᵀ``
+        the layer approximates ``W``'s action w.h.p. — the drop-in
+        replacement path for a pretrained dense layer, fine-tunable from
+        there. Returns ``(layer, params)``.
+        """
+        n_out, n_in = W.shape
+        k_spec, k_init = jax.random.split(key)
+        layer = cls.create(k_spec, n_in, n_out, k_in=k_in, k_out=k_out,
+                           k_factor=k_factor, use_bias=bias is not None,
+                           context=context)
+        params = blayers.init_from_dense(k_init, layer.spec,
+                                         jnp.asarray(W), dtype=dtype)
+        if bias is not None:
+            params["bias"] = jnp.asarray(bias, dtype=dtype)
+        return layer, params
+
+    # -- application ------------------------------------------------------
+
+    def apply(self, params: dict, x: jnp.ndarray, *,
+              context: exctx.ContextLike = None) -> jnp.ndarray:
+        """Forward pass (differentiable in ``params`` and ``x`` under every
+        backend). ``context`` overrides the layer default per call."""
+        ctx = exctx.resolve_execution(context, default=self.context)
+        return blayers.butterfly_linear_apply(self.spec, params, x,
+                                              context=ctx)
+
+    __call__ = apply
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def n_in(self) -> int:
+        return self.spec.n_in
+
+    @property
+    def n_out(self) -> int:
+        return self.spec.n_out
+
+    def param_count(self) -> int:
+        """Trainable parameter count (vs ``n_in·n_out + n_out`` dense)."""
+        return blayers.param_count(self.spec)
+
+    def dense_param_count(self) -> int:
+        return blayers.dense_param_count(self.spec.n_in, self.spec.n_out,
+                                         self.spec.use_bias)
+
+    def to_dense(self, params: dict) -> jnp.ndarray:
+        """Materialized dense ``(n_out × n_in)`` equivalent (analysis/tests;
+        excludes the bias)."""
+        return blayers.butterfly_linear_materialize(self.spec, params)
+
+
+class SandwichLinear(ButterflyLinear):
+    """The sandwich with explicit core dims ``(k_in, k_out)``.
+
+    Same object as :class:`ButterflyLinear` — this subclass exists for call
+    sites that tune the core size directly (quality/compression trade-off,
+    paper §5.1) instead of taking the ``k = log2(n)`` default.
+    """
+
+    @classmethod
+    def create(cls, key: jax.Array, n_in: int, n_out: int,  # type: ignore[override]
+               k_in: Optional[int] = None, k_out: Optional[int] = None, *,
+               k_factor: float = 1.0, use_bias: bool = True,
+               context: exctx.ContextLike = None) -> "SandwichLinear":
+        if k_in is None or k_out is None:
+            raise TypeError("SandwichLinear.create requires explicit "
+                            "k_in and k_out (use ButterflyLinear for the "
+                            "paper's log2(n) default)")
+        return super().create(key, n_in, n_out, k_in=int(k_in),
+                              k_out=int(k_out), k_factor=k_factor,
+                              use_bias=use_bias, context=context)

@@ -24,6 +24,12 @@ depend on per-version replication-checking behavior (``check_rep`` /
 ``check_vma``) — the same reason :mod:`repro.runtime.pipeline` disables the
 check around its ppermute schedule.
 
+Execution policy arrives as a finalized
+:class:`repro.kernels.context.ExecutionContext` (``context.mesh`` is the
+mesh to shard over); each shard runs the kernel under ``context.local()`` —
+the same policy with the mesh stripped — which also keys the lru-cached
+region closures, keeping jit cache keys stable.
+
 Batch sizes that do not divide the data-axis product are zero-padded up to
 the next multiple and sliced back after the region; the pad/slice pair is
 linear, so autodiff routes zero cotangents through the padding rows and
@@ -41,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels import context as exctx
 from repro.kernels import ops as kops
 from repro.runtime.compat import shard_map_compat
 
@@ -74,6 +81,14 @@ def data_axes(mesh: Optional[Mesh],
 def shard_count(mesh: Mesh, axes: Sequence[str]) -> int:
     return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) \
         if axes else 1
+
+
+def _shard_ctx(context: exctx.ContextLike,
+               axes: Optional[Sequence[str]]):
+    """(finalized ctx, per-shard local ctx, axes to shard over)."""
+    ctx = exctx.resolve_execution(context)
+    axes = data_axes(ctx.mesh, ctx.mesh_axes if axes is None else axes)
+    return ctx, ctx.local(), axes
 
 
 # ---------------------------------------------------------------------------
@@ -143,95 +158,82 @@ def shard_batch_apply(fn, x: jnp.ndarray, weights, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
-# Kernel-specific wrappers (cached closures keep jit keys stable)
+# Kernel-specific wrappers (cached closures keep jit keys stable; the
+# per-shard ExecutionContext is hashable and part of the closure key)
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _butterfly_fn(transpose, backend, block_b, segment):
+def _butterfly_fn(transpose, local_ctx):
+    # the region runs the non-routing local dispatch: re-entering the public
+    # entry point here would re-resolve the ambient context and try to
+    # shard_map again from inside the shard
     def fn(x2, w):
-        return kops.butterfly_apply(x2, w, transpose=transpose,
-                                    backend=backend, block_b=block_b,
-                                    segment=segment)
+        return kops._local_butterfly(x2, w, transpose=transpose,
+                                     ctx=local_ctx)
     return fn
 
 
-def sharded_butterfly_apply(x: jnp.ndarray, w: jnp.ndarray, *, mesh: Mesh,
+def sharded_butterfly_apply(x: jnp.ndarray, w: jnp.ndarray, *,
+                            context: exctx.ContextLike,
                             axes: Optional[Sequence[str]] = None,
-                            transpose: bool = False,
-                            backend: kops.Backend = "auto",
-                            block_b: Optional[int] = None,
-                            segment: Optional[int] = None) -> jnp.ndarray:
+                            transpose: bool = False) -> jnp.ndarray:
     """Batch-sharded fused butterfly product (see module docstring)."""
-    axes = data_axes(mesh, axes)
+    ctx, local_ctx, axes = _shard_ctx(context, axes)
     if not axes:
-        return kops.butterfly_apply(x, w, transpose=transpose,
-                                    backend=backend, block_b=block_b,
-                                    segment=segment)
-    fn = _butterfly_fn(transpose, backend, block_b, segment)
-    return shard_batch_apply(fn, x, w, mesh, axes)
+        return kops._local_butterfly(x, w, transpose=transpose,
+                                     ctx=local_ctx)
+    fn = _butterfly_fn(transpose, local_ctx)
+    return shard_batch_apply(fn, x, w, ctx.mesh, axes)
 
 
 @functools.lru_cache(maxsize=None)
-def _sandwich_fn(scale_in, scale_out, backend, block_b, segment):
+def _sandwich_fn(scale_in, scale_out, local_ctx):
     def fn(x2, weights):
         b_in, sel_in, core, sel_out, b_out = weights
-        return kops.sandwich_apply(x2, b_in, sel_in, core, sel_out, b_out,
-                                   scale_in=scale_in, scale_out=scale_out,
-                                   backend=backend, block_b=block_b,
-                                   segment=segment)
+        return kops._local_sandwich(x2, b_in, sel_in, core, sel_out, b_out,
+                                    scale_in=scale_in, scale_out=scale_out,
+                                    ctx=local_ctx)
     return fn
 
 
 def sharded_sandwich_apply(x: jnp.ndarray, b_in: jnp.ndarray,
                            sel_in: jnp.ndarray, core: jnp.ndarray,
                            sel_out: jnp.ndarray, b_out: jnp.ndarray, *,
-                           mesh: Mesh,
+                           context: exctx.ContextLike,
                            axes: Optional[Sequence[str]] = None,
-                           scale_in: float = 1.0, scale_out: float = 1.0,
-                           backend: kops.Backend = "auto",
-                           block_b: Optional[int] = None,
-                           segment: Optional[int] = None) -> jnp.ndarray:
+                           scale_in: float = 1.0, scale_out: float = 1.0
+                           ) -> jnp.ndarray:
     """Batch-sharded fused butterfly sandwich (see module docstring)."""
-    axes = data_axes(mesh, axes)
+    ctx, local_ctx, axes = _shard_ctx(context, axes)
     if not axes:
-        return kops.sandwich_apply(x, b_in, sel_in, core, sel_out, b_out,
-                                   scale_in=scale_in, scale_out=scale_out,
-                                   backend=backend, block_b=block_b,
-                                   segment=segment)
-    fn = _sandwich_fn(scale_in, scale_out, backend, block_b, segment)
+        return kops._local_sandwich(x, b_in, sel_in, core, sel_out, b_out,
+                                    scale_in=scale_in, scale_out=scale_out,
+                                    ctx=local_ctx)
+    fn = _sandwich_fn(scale_in, scale_out, local_ctx)
     return shard_batch_apply(fn, x, (b_in, sel_in, core, sel_out, b_out),
-                             mesh, axes)
+                             ctx.mesh, axes)
 
 
 @functools.lru_cache(maxsize=None)
-def _linear_fn(spec, backend, block_b, segment):
-    # deferred import: core.layers routes back here when a mesh is passed
+def _linear_fn(spec, local_ctx):
+    # deferred import: core.layers routes back here when a mesh is set
     from repro.core import layers as blayers
 
     def fn(x2, params):
-        return blayers.butterfly_linear_apply(spec, params, x2,
-                                              backend=backend,
-                                              block_b=block_b,
-                                              segment=segment)
+        return blayers._local_linear_apply(spec, params, x2, local_ctx)
     return fn
 
 
 def sharded_butterfly_linear_apply(spec, params: dict, x: jnp.ndarray, *,
-                                   mesh: Mesh,
-                                   axes: Optional[Sequence[str]] = None,
-                                   backend: kops.Backend = "auto",
-                                   block_b: Optional[int] = None,
-                                   segment: Optional[int] = None
+                                   context: exctx.ContextLike,
+                                   axes: Optional[Sequence[str]] = None
                                    ) -> jnp.ndarray:
     """Batch-sharded whole-sandwich layer: padding, kernel dispatch and bias
     all run inside the shard_map region, so the bias gradient is psum'd with
     the other weights."""
-    axes = data_axes(mesh, axes)
+    ctx, local_ctx, axes = _shard_ctx(context, axes)
     if not axes:
         from repro.core import layers as blayers
-        return blayers.butterfly_linear_apply(spec, params, x,
-                                              backend=backend,
-                                              block_b=block_b,
-                                              segment=segment)
-    fn = _linear_fn(spec, backend, block_b, segment)
-    return shard_batch_apply(fn, x, dict(params), mesh, axes)
+        return blayers._local_linear_apply(spec, params, x, local_ctx)
+    fn = _linear_fn(spec, local_ctx)
+    return shard_batch_apply(fn, x, dict(params), ctx.mesh, axes)

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from dataclasses import replace as dc_replace
 from typing import Any, Dict, List, Optional
 
 import contextlib
@@ -21,9 +20,8 @@ from jax.sharding import NamedSharding
 from repro.checkpoint.checkpointing import CheckpointManager
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data.pipeline import Prefetcher, SyntheticLM, for_model
-from repro.kernels import ops as kops
+from repro.kernels import context as exctx
 from repro.kernels import tuning
-from repro.launch.mesh import butterfly_mesh
 from repro.models import lm
 from repro.optim import optimizer as opt
 from repro.runtime import pytree as pt
@@ -32,23 +30,57 @@ from repro.runtime.fault_tolerance import StragglerMonitor
 from repro.train import steps as steps_lib
 
 
+@dataclass(frozen=True)
+class ExecutionRecord:
+    """How the butterfly sites of a run actually executed.
+
+    * ``context`` — the finalized :class:`ExecutionContext` the step
+      function traced under (``None`` when the model has no butterfly
+      sites).
+    * ``backend`` — its resolved kernel backend ("dense" without butterfly
+      sites).
+    * ``tuning`` — autotuner decisions (block_b/segment per kernel cell)
+      registered while this run traced; falls back to the process-wide
+      registry (prefixed "process-wide:") when tracing hit a warm cache
+      from an earlier run in the same process. Empty on jnp/dense paths.
+    * ``mesh_layout`` — e.g. "data=8" or "pod=2,data=4"; "" single-device.
+    """
+
+    backend: str = "dense"
+    tuning: str = ""
+    mesh_layout: str = ""
+    context: Optional[exctx.ExecutionContext] = None
+
+    def describe(self) -> str:
+        return (self.context.describe() if self.context is not None
+                else "dense")
+
+
 @dataclass
 class TrainResult:
     steps_run: int
     losses: List[float]
     resumed_from: Optional[int]
     step_times: List[float] = field(default_factory=list)
-    # resolved butterfly kernel backend the step function traced with
-    # ("dense" when the model has no butterfly sites)
-    kernel_backend: str = "dense"
-    # autotuner decisions (block_b/segment per kernel cell) registered while
-    # this run traced; falls back to the process-wide registry (prefixed
-    # "process-wide:") when tracing hit a warm cache from an earlier run in
-    # the same process. Empty on the jnp/dense paths.
-    kernel_tuning: str = ""
-    # mesh layout the butterfly sites ran under (e.g. "data=8" or
-    # "pod=2,data=4"); "" on the single-device path
-    mesh_layout: str = ""
+    # the resolved execution policy of the run (supersedes the old
+    # kernel_backend / kernel_tuning / mesh_layout fields, which live on as
+    # read-only aliases below)
+    execution: ExecutionRecord = field(default_factory=ExecutionRecord)
+
+    @property
+    def kernel_backend(self) -> str:
+        """Alias for ``execution.backend`` (pre-ExecutionContext name)."""
+        return self.execution.backend
+
+    @property
+    def kernel_tuning(self) -> str:
+        """Alias for ``execution.tuning`` (pre-ExecutionContext name)."""
+        return self.execution.tuning
+
+    @property
+    def mesh_layout(self) -> str:
+        """Alias for ``execution.mesh_layout`` (pre-ExecutionContext name)."""
+        return self.execution.mesh_layout
 
 
 class Trainer:
@@ -62,31 +94,26 @@ class Trainer:
         self.data = data or for_model(model_cfg, seq_len, global_batch,
                                       seed=train_cfg.seed)
         self.tx = steps_lib.make_optimizer(train_cfg)
-        # Resolve the butterfly kernel backend up front and freeze the
-        # concrete value into the config the step function traces with
-        # (otherwise "auto" would be re-resolved at trace time and could
-        # diverge from what TrainResult reports). The train step
-        # differentiates through the sandwich, and since the fused Pallas
-        # kernels carry custom_vjp backward passes the fused path is safe to
-        # trace under grad — "auto" keeps it on TPU end to end.
-        if model_cfg.butterfly is not None:
-            self.kernel_backend = kops.resolve_backend(
-                model_cfg.butterfly.backend)
-            model_cfg = model_cfg.with_(butterfly=dc_replace(
-                model_cfg.butterfly, backend=self.kernel_backend))
-            self.cfg = model_cfg
-        else:
-            self.kernel_backend = "dense"
-        # Multi-device butterfly execution: ButterflyConfig.mesh_shape opts
-        # in. Build the mesh once up front (fails loudly here — with the
-        # XLA_FLAGS recipe in the message — rather than mid-trace) and
-        # install it as the active sharding context while the step function
-        # traces, so every butterfly site routes through the shard_map
-        # wrappers of repro.runtime.butterfly_sharding.
+        # Resolve the run's ExecutionContext up front — concrete backend and
+        # a built mesh — and freeze it: the step function traces inside
+        # `use_execution(self.exec_ctx)`, so "auto" can't re-resolve
+        # differently at trace time and diverge from what TrainResult
+        # reports. The train step differentiates through the sandwich, and
+        # since the fused Pallas kernels carry custom_vjp backward passes
+        # the fused path is safe to trace under grad — "auto" keeps it on
+        # TPU end to end. Mesh construction (ButterflyConfig.mesh_shape
+        # opts in) fails loudly here — with the XLA_FLAGS recipe in the
+        # message — rather than mid-trace.
         bc = model_cfg.butterfly
-        self.mesh = (butterfly_mesh(bc.mesh_shape)
-                     if bc is not None and bc.mesh_shape is not None
-                     else None)
+        if bc is not None:
+            self.exec_ctx = exctx.resolve_execution(
+                default=exctx.ExecutionContext.from_butterfly_config(bc))
+            self.kernel_backend = self.exec_ctx.backend
+            self.mesh = self.exec_ctx.mesh
+        else:
+            self.exec_ctx = None
+            self.kernel_backend = "dense"
+            self.mesh = None
         self.step_fn = jax.jit(steps_lib.make_train_step(
             model_cfg, self.tx, train_cfg.microbatches),
             donate_argnums=(0, 1))
@@ -101,16 +128,18 @@ class Trainer:
         return params, opt_state
 
     def _sharding_scope(self):
-        """Active-sharding context for trace/execution when a mesh is
-        configured; no-op otherwise."""
-        if self.mesh is None:
-            return contextlib.nullcontext()
-        return rsh.use_sharding(self.mesh)
+        """Ambient contexts for trace/execution: the run's ExecutionContext
+        (so every butterfly site sees the frozen policy) plus the sharding
+        context when a mesh is configured; no-op for dense models."""
+        stack = contextlib.ExitStack()
+        if self.exec_ctx is not None:
+            stack.enter_context(exctx.use_execution(self.exec_ctx))
+        if self.mesh is not None:
+            stack.enter_context(rsh.use_sharding(self.mesh))
+        return stack
 
     def _mesh_layout(self) -> str:
-        if self.mesh is None:
-            return ""
-        return ",".join(f"{a}={s}" for a, s in self.mesh.shape.items())
+        return self.exec_ctx.mesh_layout() if self.exec_ctx else ""
 
     def _put_batch(self, x: jnp.ndarray) -> jnp.ndarray:
         """Place a (batch, ...) array batch-sharded on the mesh's data axes
@@ -203,6 +232,8 @@ class Trainer:
         return TrainResult(steps_run=steps, losses=losses,
                            resumed_from=resumed_from,
                            step_times=step_times,
-                           kernel_backend=self.kernel_backend,
-                           kernel_tuning=tuning_summary,
-                           mesh_layout=self._mesh_layout())
+                           execution=ExecutionRecord(
+                               backend=self.kernel_backend,
+                               tuning=tuning_summary,
+                               mesh_layout=self._mesh_layout(),
+                               context=self.exec_ctx))

@@ -1,0 +1,297 @@
+"""The ExecutionContext resolution order and the deprecation shim.
+
+Contract under test (repro.kernels.context): for each execution knob —
+backend, block_b, segment, mesh_shape — an explicit ``context=`` argument
+beats the ambient ``use_execution`` block, which beats the config/default
+layer (``ButterflyConfig`` via ``from_butterfly_config``), which beats the
+``REPRO_*`` env vars, which beat the autotuner/platform default. Plus: the
+once-per-process env read behind ``resolve_backend`` (and its documented
+``clear_backend_cache``), the legacy-kwarg shim, and context composition.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ButterflyConfig
+from repro.core import butterfly as bf
+from repro.core import layers as bl
+from repro.kernels import context as exctx
+from repro.kernels import ops as kops
+from repro.kernels import tuning
+from repro.kernels.context import ExecutionContext, use_execution
+
+
+@pytest.fixture(autouse=True)
+def _fresh_backend_cache():
+    """Every test sees (and leaves behind) an unread env-backend cache."""
+    exctx.clear_backend_cache()
+    yield
+    exctx.clear_backend_cache()
+
+
+def _cfg(**kw) -> ButterflyConfig:
+    return ButterflyConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Precedence: explicit > ambient > config > env (> autotune), per field
+# ---------------------------------------------------------------------------
+
+class TestPrecedence:
+    # (field, explicit value, ambient value, config kwargs, env var+value,
+    #  getter on the resolved context)
+    CASES = [
+        ("backend",
+         ExecutionContext(backend="pallas_interpret"),
+         ExecutionContext(backend="pallas"),
+         dict(backend="jnp"),
+         ("REPRO_KERNEL_BACKEND", "pallas"),
+         lambda ctx: ctx.backend,
+         ["pallas_interpret", "pallas", "jnp", "pallas"]),
+        ("block_b",
+         ExecutionContext(block_b=64),
+         ExecutionContext(block_b=32),
+         dict(block_b=16),
+         ("REPRO_TUNE_BLOCK_B", "8"),
+         lambda ctx: ctx.block_b,
+         [64, 32, 16, None]),
+        ("segment",
+         ExecutionContext(segment=4),
+         ExecutionContext(segment=3),
+         dict(segment=2),
+         ("REPRO_TUNE_SEGMENT", "1"),
+         lambda ctx: ctx.segment,
+         [4, 3, 2, None]),
+        ("mesh_shape",
+         ExecutionContext(mesh_shape=(8,)),
+         ExecutionContext(mesh_shape=(2, 4)),
+         dict(mesh_shape=(4, 2)),
+         (None, None),
+         lambda ctx: ctx.mesh_shape,
+         [(8,), (2, 4), (4, 2), None]),
+    ]
+
+    @pytest.mark.parametrize("field,explicit,ambient,cfg_kw,env,get,want",
+                             CASES, ids=[c[0] for c in CASES])
+    def test_each_layer_beats_the_next(self, monkeypatch, field, explicit,
+                                       ambient, cfg_kw, env, get, want):
+        env_var, env_val = env
+        if env_var is not None:
+            monkeypatch.setenv(env_var, env_val)
+            exctx.clear_backend_cache()
+        default = ExecutionContext.from_butterfly_config(_cfg(**cfg_kw))
+
+        # explicit beats ambient beats config
+        with use_execution(ambient):
+            got = exctx.resolve_execution(explicit, default=default)
+            assert get(got) == want[0]
+            got = exctx.resolve_execution(None, default=default)
+            assert get(got) == want[1]
+        # config beats env
+        got = exctx.resolve_execution(None, default=default)
+        assert get(got) == want[2]
+        # nothing set: env (backend) or unset-means-downstream (tiles/mesh)
+        got = exctx.resolve_execution(None, default=None)
+        if field == "backend":
+            assert get(got) == want[3]
+        else:
+            assert get(got) == want[3] or get(got) is None
+
+    def test_block_b_env_reaches_tuning_when_unset(self, monkeypatch):
+        """Resolution leaves block_b None; REPRO_TUNE_BLOCK_B then wins at
+        kernel-call time, and a context value passed as override beats it."""
+        monkeypatch.setenv("REPRO_TUNE_BLOCK_B", "8")
+        assert tuning.resolve_block_b("butterfly", 256, jnp.float32,
+                                      "fwd", override=None) == 8
+        ctx = exctx.resolve_execution(ExecutionContext(block_b=64))
+        assert tuning.resolve_block_b("butterfly", 256, jnp.float32,
+                                      "fwd", override=ctx.block_b) == 64
+
+    def test_vmem_budget_ambient_override(self):
+        """The tuning-override fields are read ambiently by the autotuner."""
+        base = tuning.vmem_budget()
+        with use_execution(ExecutionContext(vmem_budget=123456)):
+            assert tuning.vmem_budget() == 123456
+        assert tuning.vmem_budget() == base
+
+    def test_flash_block_q_ambient_override(self):
+        with use_execution(ExecutionContext(flash_block_q=16)):
+            assert tuning.flash_blocks(1024, 64, "float32") == (16, 16)
+        assert tuning.flash_blocks(1024, 64, "float32") != (16, 16)
+
+
+# ---------------------------------------------------------------------------
+# Composition / finalization
+# ---------------------------------------------------------------------------
+
+def test_nested_ambient_blocks_merge_fieldwise():
+    with use_execution(ExecutionContext(backend="jnp", block_b=16)):
+        with use_execution(ExecutionContext(block_b=32)):
+            ctx = exctx.current_execution()
+            assert ctx.backend == "jnp"        # falls through to outer
+            assert ctx.block_b == 32           # inner wins
+        ctx = exctx.current_execution()
+        assert ctx.block_b == 16
+    assert exctx.current_execution() is None
+
+
+def test_explicit_mesh_shape_beats_mismatched_sharding_ctx():
+    """An active sharding context's mesh is only reused when it IS the
+    requested shape; an explicitly different mesh_shape must win."""
+    from repro.launch.mesh import simulated_mesh
+    from repro.runtime import sharding as rsh
+
+    with rsh.use_sharding(simulated_mesh(8)):
+        # matching shape: the ambient mesh is reused
+        same = exctx.resolve_execution(ExecutionContext(mesh_shape=(8,)))
+        assert tuple(same.mesh.shape.values()) == (8,)
+        # mismatching shape: the requested layout is built, not hijacked
+        diff = exctx.resolve_execution(ExecutionContext(mesh_shape=(2, 4)))
+        assert tuple(diff.mesh.shape.items()) == (("pod", 2), ("data", 4))
+
+
+def test_resolution_is_idempotent_and_hashable():
+    ctx = exctx.resolve_execution(ExecutionContext(backend="jnp",
+                                                   mesh_shape=(2, 4)))
+    assert ctx.mesh is not None
+    assert ctx.mesh_layout() == "pod=2,data=4"
+    again = exctx.resolve_execution(ctx)
+    assert again == ctx and hash(again) == hash(ctx)
+    # local() strips the mesh so shard regions can't re-route
+    assert ctx.local().mesh is None and ctx.local().mesh_shape is None
+
+
+def test_coerce_accepts_backend_strings():
+    assert exctx.ExecutionContext.coerce("jnp") == ExecutionContext(
+        backend="jnp")
+    assert exctx.ExecutionContext.coerce(None) is None
+    with pytest.raises(TypeError):
+        exctx.ExecutionContext.coerce(123)
+    with pytest.raises(ValueError):
+        ExecutionContext(backend="nope")
+
+
+def test_from_butterfly_config_lifts_execution_fields():
+    bc = _cfg(backend="pallas_interpret", block_b=8, segment=2,
+              mesh_shape=(8,))
+    ctx = ExecutionContext.from_butterfly_config(bc)
+    assert (ctx.backend, ctx.block_b, ctx.segment, ctx.mesh_shape) == \
+        ("pallas_interpret", 8, 2, (8,))
+    assert ExecutionContext.from_butterfly_config(None) == ExecutionContext()
+
+
+# ---------------------------------------------------------------------------
+# resolve_backend: cached env read + clear_backend_cache
+# ---------------------------------------------------------------------------
+
+def test_backend_env_read_is_cached_per_process(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "pallas_interpret")
+    exctx.clear_backend_cache()
+    assert exctx.resolve_backend("auto") == "pallas_interpret"
+    # flipping the env mid-process does NOT take effect: the read is cached
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "jnp")
+    assert exctx.resolve_backend("auto") == "pallas_interpret"
+    # ... until the documented test hook clears it
+    exctx.clear_backend_cache()
+    assert exctx.resolve_backend("auto") == "jnp"
+
+
+def test_concrete_backend_skips_env(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "pallas_interpret")
+    exctx.clear_backend_cache()
+    assert exctx.resolve_backend("jnp") == "jnp"
+    with pytest.raises(ValueError):
+        exctx.resolve_backend("not_a_backend")
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim: old loose kwargs still work, but warn
+# ---------------------------------------------------------------------------
+
+def _warns_deprecated():
+    return pytest.warns(DeprecationWarning, match="deprecated")
+
+
+def test_ops_legacy_kwargs_warn_and_match_context_path():
+    n = 32
+    w = bf.fjlt_weights(jax.random.PRNGKey(0), n)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, n))
+    want = kops.butterfly_apply(x, w, context="jnp")
+    with _warns_deprecated():
+        got = kops.butterfly_apply(x, w, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_layer_legacy_kwargs_warn_and_match_context_path():
+    spec = bl.make_spec(jax.random.PRNGKey(2), 24, 40, use_bias=True)
+    params = bl.init_butterfly_linear(jax.random.PRNGKey(3), spec)
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 24))
+    want = bl.butterfly_linear_apply(spec, params, x,
+                                     context="pallas_interpret")
+    with _warns_deprecated():
+        got = bl.butterfly_linear_apply(spec, params, x,
+                                        backend="pallas_interpret",
+                                        block_b=4, segment=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_encdec_legacy_kwargs_warn():
+    from repro.core import encdec
+    spec = encdec.make_spec(jax.random.PRNGKey(5), n=20, d=6, k=2)
+    params = encdec.init_params(jax.random.PRNGKey(6), spec)
+    X = jax.random.normal(jax.random.PRNGKey(7), (20, 6))
+    want = encdec.loss_fn(spec, params, X, X, context="jnp")
+    with _warns_deprecated():
+        got = encdec.loss_fn(spec, params, X, X, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_legacy_mesh_kwarg_routes_through_sharding():
+    from repro.launch.mesh import simulated_mesh
+    mesh = simulated_mesh(8)
+    n = 32
+    w = bf.random_weights(jax.random.PRNGKey(8), n)
+    x = jax.random.normal(jax.random.PRNGKey(9), (11, n))
+    want = kops.butterfly_apply(x, w, context="jnp")
+    with _warns_deprecated():
+        got = kops.butterfly_apply(x, w, backend="jnp", mesh=mesh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_explicit_context_beats_legacy_kwargs():
+    n = 16
+    w = bf.fjlt_weights(jax.random.PRNGKey(10), n)
+    x = jax.random.normal(jax.random.PRNGKey(11), (4, n))
+    with _warns_deprecated():
+        got = kops.butterfly_apply(x, w, context="jnp",
+                                   backend="pallas_interpret")
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(kops.butterfly_apply(x, w, context="jnp")))
+
+
+def test_unknown_kwarg_still_raises_type_error():
+    n = 16
+    w = bf.fjlt_weights(jax.random.PRNGKey(12), n)
+    x = jax.random.normal(jax.random.PRNGKey(13), (2, n))
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        kops.butterfly_apply(x, w, not_a_kwarg=1)
+
+
+def test_context_api_emits_no_deprecation_warnings():
+    """First-party surface is shim-free: pure-context calls never warn
+    (the CI examples step enforces the same with -W error)."""
+    n = 16
+    w = bf.fjlt_weights(jax.random.PRNGKey(14), n)
+    x = jax.random.normal(jax.random.PRNGKey(15), (2, n))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        kops.butterfly_apply(x, w, context="jnp")
+        with use_execution(ExecutionContext(backend="jnp")):
+            kops.butterfly_apply(x, w)

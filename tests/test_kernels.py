@@ -21,7 +21,7 @@ from repro.kernels.sandwich import one_hot_select
 def test_butterfly_kernel_forward(n, batch, dtype):
     w = bf.fjlt_weights(jax.random.PRNGKey(0), n)
     x = jax.random.normal(jax.random.PRNGKey(1), (batch, n)).astype(dtype)
-    got = ops.butterfly_apply(x, w, backend="pallas_interpret")
+    got = ops.butterfly_apply(x, w, context="pallas_interpret")
     want = ref.butterfly_ref(w.astype(dtype), x)
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(got, np.float32),
@@ -36,7 +36,7 @@ def test_butterfly_kernel_transpose_and_grid(n, transpose):
     w = bf.random_weights(jax.random.PRNGKey(2), n)
     x = jax.random.normal(jax.random.PRNGKey(3), (700, n))
     got = ops.butterfly_apply(x, w, transpose=transpose,
-                              backend="pallas_interpret")
+                              context="pallas_interpret")
     want = ref.butterfly_ref(w, x, transpose=transpose)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
@@ -46,7 +46,7 @@ def test_butterfly_kernel_nd_batch():
     n = 64
     w = bf.random_weights(jax.random.PRNGKey(4), n)
     x = jax.random.normal(jax.random.PRNGKey(5), (2, 3, 5, n))
-    got = ops.butterfly_apply(x, w, backend="pallas_interpret")
+    got = ops.butterfly_apply(x, w, context="pallas_interpret")
     want = ref.butterfly_ref(w, x)
     assert got.shape == x.shape
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -69,7 +69,7 @@ def test_sandwich_kernel_vs_layer(n1, n2, k1, k2, dtype):
     got = ops.sandwich_apply(
         x, params["b_in"], sel_in, params["core"], sel_out, params["b_out"],
         scale_in=math.sqrt(n1 / k1), scale_out=math.sqrt(n2 / k2),
-        backend="pallas_interpret")
+        context="pallas_interpret")
     tol = 2e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
@@ -80,8 +80,8 @@ def test_kernel_jnp_backend_matches_interpret():
     n = 128
     w = bf.fjlt_weights(jax.random.PRNGKey(9), n)
     x = jax.random.normal(jax.random.PRNGKey(10), (17, n))
-    a = ops.butterfly_apply(x, w, backend="jnp")
-    b = ops.butterfly_apply(x, w, backend="pallas_interpret")
+    a = ops.butterfly_apply(x, w, context="jnp")
+    b = ops.butterfly_apply(x, w, context="pallas_interpret")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=1e-5, atol=1e-5)
 

@@ -1,7 +1,7 @@
 """Gradients through the fused Pallas kernels (custom_vjp backward passes).
 
 ``jax.grad`` through ``butterfly_apply`` / ``sandwich_apply`` under
-``backend="pallas_interpret"`` must match the jnp-oracle gradients — input
+``context="pallas_interpret"`` must match the jnp-oracle gradients — input
 *and* weight cotangents, forward and transpose variants — to atol 1e-5.
 The interpret backend executes the exact backward kernel bodies (grid
 accumulation included) in Python on CPU, which is what validates the
@@ -44,7 +44,7 @@ def test_butterfly_grad_matches_oracle(n, transpose):
 
     def loss(backend):
         return lambda x, w: jnp.vdot(c, ops.butterfly_apply(
-            x, w, transpose=transpose, backend=backend))
+            x, w, transpose=transpose, context=backend))
 
     gx_k, gw_k = jax.grad(loss("pallas_interpret"), argnums=(0, 1))(x, w)
     gx_o, gw_o = jax.grad(loss("jnp"), argnums=(0, 1))(x, w)
@@ -80,7 +80,7 @@ def test_butterfly_grad_nd_batch():
     c = jax.random.normal(jax.random.PRNGKey(8), (2, 3, 5, n))
     gx, gw = jax.grad(
         lambda x, w: jnp.vdot(c, ops.butterfly_apply(
-            x, w, backend="pallas_interpret")), argnums=(0, 1))(x, w)
+            x, w, context="pallas_interpret")), argnums=(0, 1))(x, w)
     gx_o, gw_o = jax.grad(
         lambda x, w: jnp.vdot(c, ref.butterfly_ref(w, x)),
         argnums=(0, 1))(x, w)
@@ -97,7 +97,7 @@ def test_butterfly_grad_bf16_finite():
     x = jax.random.normal(jax.random.PRNGKey(10), (5, n)).astype(jnp.bfloat16)
     gx, gw = jax.grad(
         lambda x, w: jnp.sum(ops.butterfly_apply(
-            x, w, backend="pallas_interpret").astype(jnp.float32) ** 2),
+            x, w, context="pallas_interpret").astype(jnp.float32) ** 2),
         argnums=(0, 1))(x, w)
     assert gx.dtype == jnp.bfloat16
     assert gw.dtype == w.dtype
@@ -123,7 +123,7 @@ def test_sandwich_grad_matches_oracle(n1, n2, k1, k2):
     def loss(backend):
         return lambda x, b_in, core, b_out: jnp.vdot(c, ops.sandwich_apply(
             x, b_in, sel_in, core, sel_out, b_out,
-            scale_in=si, scale_out=so, backend=backend))
+            scale_in=si, scale_out=so, context=backend))
 
     got = jax.grad(loss("pallas_interpret"), argnums=(0, 1, 2, 3))(
         x, params["b_in"], params["core"], params["b_out"])
@@ -146,7 +146,7 @@ def test_sandwich_sel_matrices_zero_cotangent():
 
     g_sel = jax.grad(lambda s: jnp.sum(ops.sandwich_apply(
         x, params["b_in"], s, params["core"], sel_out, params["b_out"],
-        backend="pallas_interpret") ** 2))(sel_in)
+        context="pallas_interpret") ** 2))(sel_in)
     np.testing.assert_array_equal(np.asarray(g_sel), 0.0)
 
 
@@ -155,7 +155,7 @@ def test_sandwich_sel_matrices_zero_cotangent():
 # ---------------------------------------------------------------------------
 
 def test_butterfly_linear_backend_grads_agree():
-    """butterfly_linear_apply(backend="pallas_interpret") must train exactly
+    """butterfly_linear_apply(context="pallas_interpret") must train exactly
     like the jnp path — including bias and non-power-of-two dims (padding)."""
     spec = bl.make_spec(jax.random.PRNGKey(18), 48, 100, k_in=6, k_out=7,
                         use_bias=True)
@@ -165,7 +165,7 @@ def test_butterfly_linear_backend_grads_agree():
 
     def loss(backend):
         return lambda p: jnp.vdot(c, bl.butterfly_linear_apply(
-            spec, p, x, backend=backend))
+            spec, p, x, context=backend))
 
     g_k = jax.grad(loss("pallas_interpret"))(params)
     g_o = jax.grad(loss("jnp"))(params)
@@ -183,9 +183,9 @@ def test_encdec_train_step_fused_backend():
     params = encdec.init_params(jax.random.PRNGKey(23), spec)
     X = jax.random.normal(jax.random.PRNGKey(24), (16, 12))
     g_k = jax.grad(lambda p: encdec.loss_fn(
-        spec, p, X, X, backend="pallas_interpret"))(params)
+        spec, p, X, X, context="pallas_interpret"))(params)
     g_o = jax.grad(lambda p: encdec.loss_fn(
-        spec, p, X, X, backend="jnp"))(params)
+        spec, p, X, X, context="jnp"))(params)
     for name in g_o:
         _assert_close(g_k[name], g_o[name], atol=2e-5)
 
@@ -439,7 +439,7 @@ def test_property_butterfly_vjp_finite_differences(logn, seed):
 
     def f(x, w):
         return jnp.vdot(c, ops.butterfly_apply(x, w,
-                                               backend="pallas_interpret"))
+                                               context="pallas_interpret"))
 
     gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
     directional = float(jnp.vdot(gx, dx) + jnp.vdot(gw, dw))

@@ -117,7 +117,7 @@ def test_theorem1_suboptimal_subset_is_saddle_direction():
     params = encdec.init_params(jax.random.PRNGKey(3), spec)
     Xt = encdec.apply_B(spec, params["B"], X)
     G = Xt @ Xt.T
-    Ginv = jnp.linalg.pinv(G, rcond=1e-6)
+    Ginv = encdec._pinv(G)
     S = encdec.sigma_B(spec, params["B"], X, X)
     lam, U = jnp.linalg.eigh(S)
     U = U[:, ::-1]

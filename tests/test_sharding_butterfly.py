@@ -1,7 +1,9 @@
 """Sharded fused butterfly kernels on 8 simulated devices.
 
-Parity gate for :mod:`repro.runtime.butterfly_sharding`: batch-sharded
-``shard_map`` execution of ``butterfly_apply`` / ``sandwich_apply`` /
+Parity gate for :mod:`repro.runtime.butterfly_sharding`, driven purely
+through :class:`repro.kernels.context.ExecutionContext` (``mesh_shape``
+builds the mesh; no loose kwargs anywhere): batch-sharded ``shard_map``
+execution of ``butterfly_apply`` / ``sandwich_apply`` /
 ``butterfly_linear_apply`` — forward AND ``jax.grad`` (input + every weight
 cotangent, psum'd across shards) — must match the single-device jnp oracle
 to atol 1e-5, on ``("data",)`` and ``("pod", "data")`` meshes, for batch
@@ -24,6 +26,7 @@ import pytest
 from repro.core import butterfly as bf
 from repro.core import layers as bl
 from repro.kernels import ops as kops
+from repro.kernels.context import ExecutionContext, use_execution
 from repro.kernels.sandwich import one_hot_select
 from repro.launch.mesh import simulated_mesh
 from repro.runtime import butterfly_sharding as bsh
@@ -38,16 +41,16 @@ BACKENDS = ["jnp", "pallas_interpret"]
 # rows (forward slice + zero cotangents in backward)
 BATCHES = [16, 11]
 
+# (8,) -> ("data",) mesh; (2, 4) -> ("pod", "data") — both 8 devices, both
+# built by the context itself (launch.mesh.butterfly_mesh)
+MESH_SHAPES = [(8,), (2, 4)]
+MESH_IDS = ["data8", "pod2xdata4"]
+
 slow = pytest.mark.slow
 
 
-def meshes():
-    return [simulated_mesh(8),
-            simulated_mesh(8, ("pod", "data"), (2, 4))]
-
-
-def mesh_ids():
-    return ["data8", "pod2xdata4"]
+def _ctx(backend, mesh_shape) -> ExecutionContext:
+    return ExecutionContext(backend=backend, mesh_shape=mesh_shape)
 
 
 def _assert_close(got, want, atol=1e-5):
@@ -60,22 +63,22 @@ def _grads(loss, *args):
     return jax.grad(loss, argnums=tuple(range(len(args))))(*args)
 
 
-def _butterfly_case(mesh, batch, backend, transpose, n=64):
+def _butterfly_case(mesh_shape, batch, backend, transpose, n=64):
+    ctx = _ctx(backend, mesh_shape)
     w = bf.random_weights(jax.random.PRNGKey(0), n)
     x = jax.random.normal(jax.random.PRNGKey(1), (batch, n))
     c = jax.random.normal(jax.random.PRNGKey(2), (batch, n))
 
     def sharded(x, w):
         return jnp.vdot(c, kops.butterfly_apply(
-            x, w, transpose=transpose, backend=backend, mesh=mesh))
+            x, w, transpose=transpose, context=ctx))
 
     def oracle(x, w):
         return jnp.vdot(c, kops.butterfly_apply(
-            x, w, transpose=transpose, backend="jnp"))
+            x, w, transpose=transpose, context="jnp"))
 
-    y_sh = kops.butterfly_apply(x, w, transpose=transpose, backend=backend,
-                                mesh=mesh)
-    y_o = kops.butterfly_apply(x, w, transpose=transpose, backend="jnp")
+    y_sh = kops.butterfly_apply(x, w, transpose=transpose, context=ctx)
+    y_o = kops.butterfly_apply(x, w, transpose=transpose, context="jnp")
     assert y_sh.shape == (batch, n)
     _assert_close(y_sh, y_o)
 
@@ -90,8 +93,7 @@ def _butterfly_case(mesh, batch, backend, transpose, n=64):
 # ---------------------------------------------------------------------------
 
 def test_sharded_butterfly_smoke():
-    _butterfly_case(simulated_mesh(8), batch=11, backend="jnp",
-                    transpose=False, n=32)
+    _butterfly_case((8,), batch=11, backend="jnp", transpose=False, n=32)
 
 
 # ---------------------------------------------------------------------------
@@ -99,44 +101,46 @@ def test_sharded_butterfly_smoke():
 # ---------------------------------------------------------------------------
 
 @slow
-@pytest.mark.parametrize("mesh", meshes(), ids=mesh_ids())
+@pytest.mark.parametrize("mesh_shape", MESH_SHAPES, ids=MESH_IDS)
 @pytest.mark.parametrize("batch", BATCHES)
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("transpose", [False, True])
-def test_sharded_butterfly_parity(mesh, batch, backend, transpose):
-    _butterfly_case(mesh, batch, backend, transpose)
+def test_sharded_butterfly_parity(mesh_shape, batch, backend, transpose):
+    _butterfly_case(mesh_shape, batch, backend, transpose)
 
 
 @slow
 def test_sharded_butterfly_nd_batch():
     """Leading axes flatten into the sharded batch and are restored."""
-    mesh = simulated_mesh(8)
     n = 32
+    ctx = _ctx("jnp", (8,))
     w = bf.random_weights(jax.random.PRNGKey(3), n)
     x = jax.random.normal(jax.random.PRNGKey(4), (3, 5, n))  # 15 rows: pads
-    y_sh = kops.butterfly_apply(x, w, backend="jnp", mesh=mesh)
-    y_o = kops.butterfly_apply(x, w, backend="jnp")
+    y_sh = kops.butterfly_apply(x, w, context=ctx)
+    y_o = kops.butterfly_apply(x, w, context="jnp")
     assert y_sh.shape == x.shape
     _assert_close(y_sh, y_o)
 
 
 @slow
-def test_sharded_butterfly_under_jit():
-    mesh = simulated_mesh(8)
+def test_sharded_butterfly_under_jit_ambient_context():
+    """An ambient use_execution block shards a jitted loss — no per-call
+    kwargs at all."""
     n = 32
+    ctx = _ctx("jnp", (8,))
     w = bf.random_weights(jax.random.PRNGKey(5), n)
     x = jax.random.normal(jax.random.PRNGKey(6), (11, n))
 
     @jax.jit
     def loss(x, w):
-        return jnp.sum(kops.butterfly_apply(x, w, backend="jnp",
-                                            mesh=mesh) ** 2)
+        with use_execution(ctx):
+            return jnp.sum(kops.butterfly_apply(x, w) ** 2)
 
-    want = jnp.sum(kops.butterfly_apply(x, w, backend="jnp") ** 2)
+    want = jnp.sum(kops.butterfly_apply(x, w, context="jnp") ** 2)
     _assert_close(loss(x, w), want, atol=1e-4)
     gx = jax.jit(jax.grad(loss))(x, w)
     gx_o = jax.grad(lambda x: jnp.sum(kops.butterfly_apply(
-        x, w, backend="jnp") ** 2))(x)
+        x, w, context="jnp") ** 2))(x)
     _assert_close(gx, gx_o, atol=1e-4)
 
 
@@ -145,7 +149,8 @@ def test_sharded_butterfly_under_jit():
 # multi-axis psum machinery is shared with the butterfly tests above
 # ---------------------------------------------------------------------------
 
-def _sandwich_case(mesh, batch, backend):
+def _sandwich_case(mesh_shape, batch, backend):
+    ctx = _ctx(backend, mesh_shape)
     n1, n2, k1, k2 = 32, 64, 8, 6
     spec = bl.make_spec(jax.random.PRNGKey(7), n1, n2, k_in=k1, k_out=k2,
                         use_bias=False)
@@ -160,15 +165,13 @@ def _sandwich_case(mesh, batch, backend):
                                    scale_in=1.5, scale_out=0.5, **kw)
 
     def sharded(x, b_in, core, b_out):
-        return jnp.vdot(c, call(x, b_in, core, b_out, backend=backend,
-                                mesh=mesh))
+        return jnp.vdot(c, call(x, b_in, core, b_out, context=ctx))
 
     def oracle(x, b_in, core, b_out):
-        return jnp.vdot(c, call(x, b_in, core, b_out, backend="jnp"))
+        return jnp.vdot(c, call(x, b_in, core, b_out, context="jnp"))
 
     args = (x, params["b_in"], params["core"], params["b_out"])
-    _assert_close(call(*args, backend=backend, mesh=mesh),
-                  call(*args, backend="jnp"))
+    _assert_close(call(*args, context=ctx), call(*args, context="jnp"))
     for g_sh, g_o in zip(_grads(sharded, *args), _grads(oracle, *args)):
         _assert_close(g_sh, g_o)
 
@@ -177,19 +180,20 @@ def _sandwich_case(mesh, batch, backend):
 @pytest.mark.parametrize("batch", BATCHES)
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_sharded_sandwich_parity(batch, backend):
-    _sandwich_case(simulated_mesh(8), batch, backend)
+    _sandwich_case((8,), batch, backend)
 
 
 @slow
 def test_sharded_sandwich_pod_data_mesh():
-    _sandwich_case(simulated_mesh(8, ("pod", "data"), (2, 4)), 11, "jnp")
+    _sandwich_case((2, 4), 11, "jnp")
 
 
 # ---------------------------------------------------------------------------
 # butterfly_linear_apply (whole layer: padding + kernel + bias in-region)
 # ---------------------------------------------------------------------------
 
-def _linear_case(mesh, batch, backend):
+def _linear_case(mesh_shape, batch, backend):
+    ctx = _ctx(backend, mesh_shape)
     n_in, n_out = 48, 80  # non-power-of-two: exercises in-region padding
     spec = bl.make_spec(jax.random.PRNGKey(11), n_in, n_out, use_bias=True)
     params = bl.init_butterfly_linear(jax.random.PRNGKey(12), spec)
@@ -200,15 +204,14 @@ def _linear_case(mesh, batch, backend):
 
     def sharded(params, x):
         return jnp.vdot(c, bl.butterfly_linear_apply(
-            spec, params, x, backend=backend, mesh=mesh))
+            spec, params, x, context=ctx))
 
     def oracle(params, x):
         return jnp.vdot(c, bl.butterfly_linear_apply(
-            spec, params, x, backend="jnp"))
+            spec, params, x, context="jnp"))
 
-    y_sh = bl.butterfly_linear_apply(spec, params, x, backend=backend,
-                                     mesh=mesh)
-    y_o = bl.butterfly_linear_apply(spec, params, x, backend="jnp")
+    y_sh = bl.butterfly_linear_apply(spec, params, x, context=ctx)
+    y_o = bl.butterfly_linear_apply(spec, params, x, context="jnp")
     assert y_sh.shape == (batch, n_out)
     _assert_close(y_sh, y_o)
 
@@ -223,12 +226,31 @@ def _linear_case(mesh, batch, backend):
 @pytest.mark.parametrize("batch", BATCHES)
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_sharded_linear_apply_parity(batch, backend):
-    _linear_case(simulated_mesh(8), batch, backend)
+    _linear_case((8,), batch, backend)
 
 
 @slow
 def test_sharded_linear_apply_pod_data_mesh():
-    _linear_case(simulated_mesh(8, ("pod", "data"), (2, 4)), 11, "jnp")
+    _linear_case((2, 4), 11, "jnp")
+
+
+# ---------------------------------------------------------------------------
+# repro.nn module API through the same sharded context
+# ---------------------------------------------------------------------------
+
+@slow
+def test_sharded_nn_butterfly_linear():
+    """ButterflyLinear.apply under a mesh context == its single-device
+    self — the module facade rides the exact same sharded path."""
+    from repro import nn
+
+    layer = nn.ButterflyLinear.create(jax.random.PRNGKey(30), 48, 80,
+                                      use_bias=True)
+    params = layer.init(jax.random.PRNGKey(31))
+    x = jax.random.normal(jax.random.PRNGKey(32), (11, 48))
+    ctx = _ctx("jnp", (8,))
+    _assert_close(layer.apply(params, x, context=ctx),
+                  layer.apply(params, x, context="jnp"))
 
 
 # ---------------------------------------------------------------------------
@@ -240,21 +262,21 @@ def test_sharded_linear_apply_pod_data_mesh():
 def test_sharded_encdec_apply_b_parity():
     from repro.core import encdec
 
-    mesh = simulated_mesh(8)
+    ctx = _ctx("jnp", (8,))
     spec = encdec.make_spec(jax.random.PRNGKey(18), n=50, d=22, k=4)
     params = encdec.init_params(jax.random.PRNGKey(19), spec)
     X = jax.random.normal(jax.random.PRNGKey(20), (50, 22))  # d=22 pads
 
-    Xt_sh = encdec.apply_B(spec, params["B"], X, backend="jnp", mesh=mesh)
-    Xt_o = encdec.apply_B(spec, params["B"], X, backend="jnp")
+    Xt_sh = encdec.apply_B(spec, params["B"], X, context=ctx)
+    Xt_o = encdec.apply_B(spec, params["B"], X, context="jnp")
     assert Xt_sh.shape == (spec.ell, 22)
     _assert_close(Xt_sh, Xt_o)
 
-    def loss(p, **kw):
-        return encdec.loss_fn(spec, p, X, X, backend="jnp", **kw)
+    def loss(p, context="jnp"):
+        return encdec.loss_fn(spec, p, X, X, context=context)
 
-    _assert_close(loss(params, mesh=mesh), loss(params), atol=1e-3)
-    g_sh = jax.grad(lambda p: loss(p, mesh=mesh))(params)
+    _assert_close(loss(params, context=ctx), loss(params), atol=1e-3)
+    g_sh = jax.grad(lambda p: loss(p, context=ctx))(params)
     g_o = jax.grad(loss)(params)
     for k in g_o:
         _assert_close(g_sh[k], g_o[k], atol=1e-4)
@@ -276,11 +298,25 @@ def test_data_axes_resolution():
 
 
 def test_trivial_mesh_falls_back_to_local_path():
-    """A mesh whose data axes are all size 1 must not emit shard_map."""
-    mesh = simulated_mesh(1, ("data",), (1,))
+    """A context whose mesh has no data axes > 1 must not emit shard_map."""
     n = 32
+    ctx = ExecutionContext(backend="jnp", mesh=simulated_mesh(1, ("data",),
+                                                              (1,)))
     w = bf.random_weights(jax.random.PRNGKey(16), n)
     x = jax.random.normal(jax.random.PRNGKey(17), (5, n))
-    assert bsh.data_axes(mesh) == ()
-    y = kops.butterfly_apply(x, w, backend="jnp", mesh=mesh)
-    _assert_close(y, kops.butterfly_apply(x, w, backend="jnp"))
+    assert bsh.data_axes(ctx.mesh) == ()
+    y = kops.butterfly_apply(x, w, context=ctx)
+    _assert_close(y, kops.butterfly_apply(x, w, context="jnp"))
+
+
+@slow
+def test_mesh_axes_restriction_in_context():
+    """ExecutionContext.mesh_axes limits which axes shard: restricting the
+    pod2xdata4 mesh to ("data",) still matches the oracle (4-way shard)."""
+    n = 32
+    ctx = ExecutionContext(backend="jnp", mesh_shape=(2, 4),
+                           mesh_axes=("data",))
+    w = bf.random_weights(jax.random.PRNGKey(21), n)
+    x = jax.random.normal(jax.random.PRNGKey(22), (10, n))
+    y = kops.butterfly_apply(x, w, context=ctx)
+    _assert_close(y, kops.butterfly_apply(x, w, context="jnp"))
