@@ -1,0 +1,92 @@
+"""Serving benchmark: steady-state decode throughput + TTFT percentiles.
+
+Replays a seeded Poisson-ish synthetic trace (mixed prompt lengths, all
+submitted up front — on CPU the engine is always the bottleneck, so arrival
+gaps only add noise) through a greedy :class:`repro.serve.ServeEngine` on
+the smoke arch and emits:
+
+* ``serve/trace_e2e`` — wall µs to drain the whole fixed seeded trace on a
+  warmed engine (the timed row the regression gate covers: per-token decode
+  is a few hundred µs on this arch, under ``diff.py``'s noise floor, while
+  the trace wall time sits comfortably above it and covers admission +
+  scheduling + decode together); µs/token, tokens/s, p50/p95 TTFT and slot
+  occupancy ride the derived column;
+* ``serve/large_pool`` — the 16-slot variant, emitted as *skipped* on CPU
+  (one tick is minutes of wall clock at that batch) and timed on TPU.
+
+Compile time is excluded from the steady-state number by warming every
+bucket and the pooled decode step with a burn-in trace first — the engine's
+CompileCache makes "warm" checkable rather than hoped-for.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+
+
+def _trace(cfg, rng, n, max_prompt):
+    return [rng.integers(0, cfg.vocab_size,
+                         size=int(rng.integers(4, max_prompt + 1)))
+            for _ in range(n)]
+
+
+def _drain(engine, prompts, max_new):
+    futs = [engine.submit(p, max_new_tokens=max_new) for p in prompts]
+    engine.run_until_idle()
+    for f in futs:
+        f.result(0)
+
+
+def _run_engine(slots: int, requests: int, max_new: int, seed: int = 0):
+    from repro.configs import registry
+    from repro.serve import ServeEngine, loader
+
+    cfg = registry.get("smollm-135m-smoke")
+    _, params = loader.load_for_serving(cfg, seed=0)
+    engine = ServeEngine(cfg, params, slots=slots, max_len=96, seed=seed)
+    rng = np.random.default_rng(seed)
+    # burn-in: one request per power-of-two bucket warms every compile,
+    # then the metrics (incl. the tick clock) reset so neither compile
+    # wall-time nor cold-TTFT requests leak into the gated snapshot
+    _drain(engine, [rng.integers(0, cfg.vocab_size, size=n)
+                    for n in (8, 16, 32, 48)], 2)
+    warm_compiles = engine.compile_stats["compiles"]
+    engine.reset_metrics()
+
+    prompts = _trace(cfg, rng, requests, max_prompt=48)
+    t0 = time.perf_counter()
+    _drain(engine, prompts, max_new)
+    wall = time.perf_counter() - t0
+    assert engine.compile_stats["compiles"] == warm_compiles, \
+        "benchmark trace hit a cold compile; widen the burn-in buckets"
+    return engine.metrics.snapshot(), wall
+
+
+def run(requests: int = 24, max_new: int = 8) -> None:
+    snap, wall = _run_engine(slots=4, requests=requests, max_new=max_new)
+    tok_s = snap["decode_tok_per_s"]
+    common.emit(
+        "serve/trace_e2e", wall * 1e6,
+        f"us_per_tok={1e6 / tok_s:.1f};tok_s={tok_s:.1f};"
+        f"p50_ttft_ms={snap['ttft_ms']['p50']};"
+        f"p95_ttft_ms={snap['ttft_ms']['p95']};"
+        f"occupancy={snap['slot_occupancy']};"
+        f"requests={snap['requests_finished']};"
+        f"tokens={snap['total_tokens']}")
+
+    if jax.default_backend() == "tpu":
+        snap, wall = _run_engine(slots=16, requests=4 * requests,
+                                 max_new=max_new)
+        tok_s = snap["decode_tok_per_s"]
+        common.emit("serve/large_pool", 1e6 / tok_s if tok_s else None,
+                    f"tok_s={tok_s:.1f};"
+                    f"p95_ttft_ms={snap['ttft_ms']['p95']};"
+                    f"occupancy={snap['slot_occupancy']}")
+    else:
+        common.emit_skipped("serve/large_pool",
+                            "16-slot pool too slow on CPU; timed on TPU")

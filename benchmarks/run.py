@@ -17,8 +17,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import (bench_autoencoder, bench_backward,  # noqa: E402
                         bench_kernels, bench_lm_butterfly, bench_nonlinear,
-                        bench_param_counts, bench_sketch, bench_speed,
-                        bench_theorem1, bench_two_phase, common)
+                        bench_param_counts, bench_serving, bench_sketch,
+                        bench_speed, bench_theorem1, bench_two_phase,
+                        common)
 
 
 def summarize_dryrun(out_dir: str = "experiments/dryrun") -> None:
@@ -75,12 +76,14 @@ def main() -> None:
         bench_two_phase.run(steps1=60, steps2=40)
         bench_sketch.run(steps=30)
         bench_lm_butterfly.run(steps=15)
+        bench_serving.run(requests=24, max_new=8)
     else:
         bench_autoencoder.run()
         bench_two_phase.run()
         bench_sketch.run()
         bench_sketch.run_ell_sweep()
         bench_lm_butterfly.run()
+        bench_serving.run()
     summarize_dryrun()
     path = write_json("quick" if fast else "full")
     print(f"# wrote {path}", file=sys.stderr)

@@ -1,9 +1,15 @@
-"""Batched serving demo: prefill a prompt batch, then step-decode greedily
-with per-layer KV/state caches (same serve_step the dry-run lowers).
+"""Continuous-batching serving demo on :class:`repro.serve.ServeEngine`.
+
+Mixed-length prompts arrive over time through the async client; the engine
+admits them into its decode-slot pool as slots free up (bucketed prefill,
+one compile per power-of-two bucket) and advances every in-flight request
+one token per fused pooled decode tick. Per-request TTFT/TPOT and the
+engine's throughput/occupancy snapshot are printed at the end.
 
 Run: ``PYTHONPATH=src python examples/serve_lm.py --arch smollm-135m-smoke``
-Try ``--arch recurrentgemma-2b-smoke`` (RG-LRU state + ring-buffer window
-cache) or ``--arch xlstm-125m-smoke`` (matrix-memory state, O(1) decode).
+Try ``--arch recurrentgemma-2b-smoke`` (RG-LRU state: the engine switches
+to exact-length prefill buckets, since padding would corrupt the recurrent
+state) or ``--temperature 0.8 --top-p 0.9`` for nucleus sampling.
 """
 
 import argparse
@@ -13,64 +19,75 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m-smoke")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--gen-len", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     args = ap.parse_args()
 
     from repro.configs import registry
-    from repro.models import lm
-    from repro.runtime import pytree as pt
-    from repro.train import steps as steps_lib
+    from repro.serve import SamplingParams, ServeClient, ServeEngine, loader
 
     cfg = registry.get(args.arch)
-    params = pt.init_params(jax.random.PRNGKey(0), lm.model_specs(cfg))
-    B, S, T = args.batch, args.prompt_len, args.gen_len
+    _, params = loader.load_for_serving(cfg, seed=0)
+    engine = ServeEngine(
+        cfg, params, slots=args.slots, max_len=args.max_len,
+        sampling=SamplingParams(temperature=args.temperature,
+                                top_p=args.top_p), seed=0)
 
     rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
-    if cfg.frontend == "vision":
-        batch["frontend_embeds"] = jnp.asarray(rng.normal(
-            size=(B, cfg.frontend_tokens, cfg.d_model)), jnp.float32)
-    if cfg.n_enc_layers:
-        batch["frames"] = jnp.asarray(rng.normal(
-            size=(B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    hi = min(48, args.max_len - args.gen_len)
+    if hi < 4:
+        raise SystemExit(
+            f"--max-len {args.max_len} leaves no room for --gen-len "
+            f"{args.gen_len}: need max_len - gen_len >= 4 (the per-slot "
+            f"budget is prompt + generated tokens)")
+    lengths = rng.integers(4, hi + 1, size=args.requests)
+    print(f"arch={cfg.name}  slots={args.slots}  requests={args.requests}  "
+          f"prompt lengths={lengths.tolist()}")
 
-    caches = lm.init_caches(cfg, B, S + T)
-    prefill = jax.jit(steps_lib.make_prefill_step(cfg))
-    serve = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(2,))
+    def extras():
+        # frontend-stub archs (VLM / enc-dec audio) ride per-request
+        # precomputed embeddings, exactly like the training pipeline
+        out = {}
+        if cfg.frontend == "vision":
+            out["frontend_embeds"] = rng.normal(
+                size=(1, cfg.frontend_tokens, cfg.d_model)).astype("float32")
+        if cfg.n_enc_layers:
+            out["frames"] = rng.normal(
+                size=(1, cfg.enc_seq, cfg.d_model)).astype("float32")
+        return out or None
 
-    t0 = time.perf_counter()
-    logits, caches = prefill(params, batch, caches)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    futs = []
+    with ServeClient(engine) as client:
+        for plen in lengths:
+            prompt = rng.integers(0, cfg.vocab_size, size=int(plen))
+            futs.append(client.submit(prompt, max_new_tokens=args.gen_len,
+                                      extras=extras()))
+            time.sleep(0.01)          # requests trickle in, engine runs
+        for fut in futs:
+            r = fut.result(timeout=600)
+            m = r.metrics
+            print(f"  req[{r.rid}] prompt={m.prompt_len:2d} "
+                  f"ttft={m.ttft * 1e3:6.1f} ms  "
+                  f"tpot={m.tpot * 1e3:5.1f} ms/token  "
+                  f"tokens={r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}")
 
-    extra = cfg.frontend_tokens if cfg.frontend == "vision" else 0
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    generated = [np.asarray(tok)]
-    t0 = time.perf_counter()
-    for t in range(T - 1):
-        tok, logits, caches = serve(params, tok, caches,
-                                    jnp.asarray(S + extra + t, jnp.int32))
-        generated.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    gen = np.stack(generated, axis=1)
-    print(f"arch={cfg.name}  batch={B}  prompt={S}  generated={T}")
-    print(f"prefill: {t_prefill * 1e3:.1f} ms   "
-          f"decode: {t_decode / max(T - 1, 1) * 1e3:.1f} ms/token")
-    for b in range(min(B, 2)):
-        print(f"  seq[{b}]: {gen[b].tolist()}")
+    snap = engine.metrics.snapshot()
+    stats = engine.compile_stats
+    print(f"decode: {snap['decode_tok_per_s']:.1f} tok/s  "
+          f"occupancy: {snap['slot_occupancy']:.2f}  "
+          f"ticks: {snap['ticks']}  compiles: {stats['compiles']} "
+          f"(prefill buckets: "
+          f"{sorted(k[2] for k in stats['traces'] if k[0] == 'prefill')})")
 
 
 if __name__ == "__main__":

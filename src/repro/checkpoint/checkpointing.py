@@ -36,6 +36,33 @@ PyTree = Any
 _SENTINEL = "_COMMITTED"
 
 
+def load_latest(directory: str, template: PyTree,
+                step: Optional[int] = None,
+                shardings: Optional[PyTree] = None
+                ) -> Tuple[Optional[int], Optional[PyTree], Dict]:
+    """Restore the newest valid checkpoint from ``directory`` — the public
+    one-shot read path (serving, analysis) that doesn't want to hold a
+    :class:`CheckpointManager` for saves.
+
+    Same semantics as :meth:`CheckpointManager.restore`: newest committed
+    step first (or exactly ``step`` if given), torn/corrupt checkpoints
+    skipped with fallback to the next older valid one. ``template`` only
+    has to describe the subtree the caller wants — extra arrays in the
+    checkpoint (say the optimizer state, when serving only needs params)
+    are ignored. Returns ``(step, tree, extra)`` or ``(None, None, {})``.
+
+    Strictly read-only: unlike constructing a :class:`CheckpointManager`
+    (whose init makes the directory for upcoming saves), a missing
+    ``directory`` — e.g. a typo'd path — is left missing, so the mistake
+    stays visible on the next run instead of turning into a plausible
+    empty checkpoint dir.
+    """
+    if not os.path.isdir(directory):
+        return None, None, {}
+    return CheckpointManager(directory).restore(template, step=step,
+                                                shardings=shardings)
+
+
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     flat = {}
 

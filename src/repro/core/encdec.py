@@ -69,7 +69,7 @@ def init_params(key: jax.Array, spec: EncDecSpec) -> Dict[str, jnp.ndarray]:
 
 
 def apply_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray, *,
-            context: exctx.ContextLike = None, **legacy) -> jnp.ndarray:
+            context: exctx.ContextLike = None) -> jnp.ndarray:
     """``B X`` for column-data ``X (n×d)`` -> (ℓ×d).
 
     The butterfly product dispatches through :mod:`repro.kernels.ops`; the
@@ -78,10 +78,8 @@ def apply_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray, *,
     Execution policy — backend, tile sizes, mesh — rides ``context``
     (:mod:`repro.kernels.context`); a context with a mesh shards the data
     columns (the batch dim of the transposed product) over its data axes via
-    :mod:`repro.runtime.butterfly_sharding`. The pre-context kwargs still
-    work via the deprecation shim and warn.
+    :mod:`repro.runtime.butterfly_sharding`.
     """
-    context = exctx.apply_legacy(context, legacy, "apply_B")
     Xp = X
     if spec.pad_n != spec.n:
         Xp = jnp.pad(X, ((0, spec.pad_n - spec.n), (0, 0)))
@@ -91,16 +89,14 @@ def apply_B(spec: EncDecSpec, w: jnp.ndarray, X: jnp.ndarray, *,
 
 
 def forward(spec: EncDecSpec, params: Dict, X: jnp.ndarray, *,
-            context: exctx.ContextLike = None, **legacy) -> jnp.ndarray:
-    context = exctx.apply_legacy(context, legacy, "forward")
+            context: exctx.ContextLike = None) -> jnp.ndarray:
     Xt = apply_B(spec, params["B"], X, context=context)
     return params["D"] @ (params["E"] @ Xt)
 
 
 def loss_fn(spec: EncDecSpec, params: Dict, X: jnp.ndarray,
             Y: jnp.ndarray, *,
-            context: exctx.ContextLike = None, **legacy) -> jnp.ndarray:
-    context = exctx.apply_legacy(context, legacy, "loss_fn")
+            context: exctx.ContextLike = None) -> jnp.ndarray:
     Yb = forward(spec, params, X, context=context)
     return jnp.sum(jnp.square(Yb - Y))
 
@@ -197,7 +193,7 @@ def fjlt_pca_loss(key: jax.Array, X: jnp.ndarray, k: int, ell: int
 def train(spec: EncDecSpec, params: Dict, X: jnp.ndarray, Y: jnp.ndarray,
           steps: int, lr: float = 1e-3, train_B: bool = True,
           log_every: int = 0,
-          context: exctx.ContextLike = None, **legacy) -> Tuple[Dict, list]:
+          context: exctx.ContextLike = None) -> Tuple[Dict, list]:
     """Full-batch Adam on the reconstruction loss.
 
     ``train_B=False`` freezes the butterfly (phase 1 of two-phase learning).
@@ -206,7 +202,6 @@ def train(spec: EncDecSpec, params: Dict, X: jnp.ndarray, Y: jnp.ndarray,
     are autotuned; a context with a mesh data-shards the butterfly product
     across devices. Returns (params, loss history).
     """
-    context = exctx.apply_legacy(context, legacy, "train")
     tx = opt.adamw(lr)
     state = tx.init(params)
 
@@ -233,11 +228,10 @@ def train(spec: EncDecSpec, params: Dict, X: jnp.ndarray, Y: jnp.ndarray,
 def train_two_phase(spec: EncDecSpec, params: Dict, X: jnp.ndarray,
                     Y: jnp.ndarray, steps1: int, steps2: int,
                     lr: float = 1e-3, log_every: int = 0,
-                    context: exctx.ContextLike = None, **legacy
+                    context: exctx.ContextLike = None
                     ) -> Tuple[Dict, list, list]:
     """§5.3: phase 1 trains (D, E) with B frozen at its FJLT init (Theorem 1
     guarantees local = global here); phase 2 fine-tunes all three."""
-    context = exctx.apply_legacy(context, legacy, "train_two_phase")
     params, h1 = train(spec, params, X, Y, steps1, lr=lr, train_B=False,
                        log_every=log_every, context=context)
     params, h2 = train(spec, params, X, Y, steps2, lr=lr, train_B=True,

@@ -158,8 +158,8 @@ def _selection_matrices(spec: ButterflySpec):
 
 def butterfly_linear_apply(spec: ButterflySpec, params: dict,
                            x: jnp.ndarray, *,
-                           context: exctx.ContextLike = None,
-                           **legacy) -> jnp.ndarray:
+                           context: exctx.ContextLike = None
+                           ) -> jnp.ndarray:
     """Apply the sandwich along the last axis: (..., n_in) -> (..., n_out).
 
     Execution policy rides ``context`` (an
@@ -171,13 +171,11 @@ def butterfly_linear_apply(spec: ButterflySpec, params: dict,
     the :mod:`repro.kernels.tuning` autotuner. A context with a mesh
     batch-shards the whole layer (padding, kernel, bias) over the mesh's
     data axes with replicated weights and psum'd weight grads
-    (:mod:`repro.runtime.butterfly_sharding`). The pre-context kwargs still
-    work via the deprecation shim and warn.
+    (:mod:`repro.runtime.butterfly_sharding`).
     """
     if x.shape[-1] != spec.n_in:
         raise ValueError(f"expected last dim {spec.n_in}, got {x.shape[-1]}")
-    ctx = exctx.resolve_execution(
-        exctx.apply_legacy(context, legacy, "butterfly_linear_apply"))
+    ctx = exctx.resolve_execution(context)
     route = kops._sharded_route(ctx)
     if route is not None:
         bsh, axes = route

@@ -22,18 +22,17 @@ result — concrete backend (env override read once per process, see
 :class:`~jax.sharding.Mesh` — into a context that is safe to close over in
 jit and to use as an lru/jit cache key.
 
-The one-release deprecation shim :func:`apply_legacy` keeps the old loose
-kwargs working on the public entry points (mapping them onto a context with a
-:class:`DeprecationWarning`); first-party code never goes through it — the
-CI examples step runs under ``-W error::DeprecationWarning`` to keep it that
-way.
+The pre-context loose kwargs (``backend=``, ``block_b=``, ``segment=``,
+``mesh=``, ``mesh_axes=``) had a one-release deprecation shim; it is gone
+— the entry points now reject unknown kwargs with a plain ``TypeError``,
+and the CI examples step still runs under ``-W error::DeprecationWarning``
+as a tripwire for any future shim.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import os
-import warnings
 from dataclasses import dataclass
 from typing import Literal, Optional, Tuple, Union
 
@@ -49,7 +48,6 @@ __all__ = [
     "resolve_execution",
     "resolve_backend",
     "clear_backend_cache",
-    "apply_legacy",
 ]
 
 Backend = Literal["auto", "jnp", "pallas", "pallas_interpret"]
@@ -333,42 +331,3 @@ def resolve_execution(context: ContextLike = None,
     return dataclasses.replace(merged,
                                backend=resolve_backend(merged.backend),
                                mesh=_resolve_mesh(merged))
-
-
-# ---------------------------------------------------------------------------
-# Deprecation shim for the old loose kwargs
-# ---------------------------------------------------------------------------
-
-_LEGACY_FIELDS = ("backend", "block_b", "segment", "mesh", "mesh_axes")
-_LEGACY_DEFAULTS = {"backend": "auto", "block_b": None, "segment": None,
-                    "mesh": None, "mesh_axes": None}
-
-
-def apply_legacy(context: ContextLike, legacy: dict, caller: str
-                 ) -> Optional[ExecutionContext]:
-    """Map pre-context kwargs onto a context, warning once per call.
-
-    One-release shim: ``fn(..., backend=..., block_b=..., segment=...,
-    mesh=..., mesh_axes=...)`` still works everywhere it used to, but emits
-    a :class:`DeprecationWarning` naming the replacement. An explicitly
-    passed ``context`` wins over the legacy kwargs field-wise. Unknown
-    kwargs raise ``TypeError`` exactly as the old signatures did.
-    """
-    if not legacy:
-        return ExecutionContext.coerce(context)
-    unknown = [k for k in legacy if k not in _LEGACY_FIELDS]
-    if unknown:
-        raise TypeError(f"{caller}() got unexpected keyword argument(s) "
-                        f"{', '.join(sorted(unknown))!s}")
-    warnings.warn(
-        f"{caller}(): the {'/'.join(sorted(legacy))} keyword(s) are "
-        f"deprecated; pass context=ExecutionContext(...) or wrap the call "
-        f"in `with use_execution(...):` (repro.kernels.context)",
-        DeprecationWarning, stacklevel=3)
-    kw = dict(_LEGACY_DEFAULTS)
-    kw.update({k: v for k, v in legacy.items() if v is not None})
-    if kw["mesh_axes"] is not None:
-        kw["mesh_axes"] = tuple(kw["mesh_axes"])
-    shim = ExecutionContext(**kw)
-    explicit = ExecutionContext.coerce(context)
-    return explicit.over(shim) if explicit is not None else shim

@@ -22,8 +22,8 @@ autotune/platform; see :mod:`repro.kernels.context`.
   :mod:`repro.kernels.tuning` VMEM/roofline autotuner.
 
 The pre-context loose kwargs (``backend=``, ``block_b=``, ``segment=``,
-``mesh=``, ``mesh_axes=``) still work for one release via the deprecation
-shim (:func:`repro.kernels.context.apply_legacy`) and warn.
+``mesh=``, ``mesh_axes=``) are gone — their one-release deprecation shim
+was removed; ``context=`` is the only execution-policy argument.
 """
 
 from __future__ import annotations
@@ -69,8 +69,7 @@ def _local_butterfly(x: jnp.ndarray, w: jnp.ndarray, *, transpose: bool,
 
 def butterfly_apply(x: jnp.ndarray, w: jnp.ndarray, *,
                     transpose: bool = False,
-                    context: exctx.ContextLike = None,
-                    **legacy) -> jnp.ndarray:
+                    context: exctx.ContextLike = None) -> jnp.ndarray:
     """Fused butterfly product over the last axis of ``x``.
 
     Differentiable under every backend; the Pallas backends use the fused
@@ -78,8 +77,7 @@ def butterfly_apply(x: jnp.ndarray, w: jnp.ndarray, *,
     execution knobs ride ``context`` (module docstring); a context with a
     mesh batch-shards the call over its data axes.
     """
-    ctx = exctx.resolve_execution(
-        exctx.apply_legacy(context, legacy, "butterfly_apply"))
+    ctx = exctx.resolve_execution(context)
     route = _sharded_route(ctx)
     if route is not None:
         bsh, axes = route
@@ -92,16 +90,14 @@ def sandwich_apply(x: jnp.ndarray, b_in: jnp.ndarray, sel_in: jnp.ndarray,
                    core: jnp.ndarray, sel_out: jnp.ndarray,
                    b_out: jnp.ndarray, *, scale_in: float = 1.0,
                    scale_out: float = 1.0,
-                   context: exctx.ContextLike = None,
-                   **legacy) -> jnp.ndarray:
+                   context: exctx.ContextLike = None) -> jnp.ndarray:
     """Fused butterfly sandwich (dense-layer replacement) over the last axis.
 
     Differentiable under every backend; the Pallas backends use the fused
     custom_vjp backward kernel with segmented stage checkpointing. All
     execution knobs ride ``context`` (module docstring).
     """
-    ctx = exctx.resolve_execution(
-        exctx.apply_legacy(context, legacy, "sandwich_apply"))
+    ctx = exctx.resolve_execution(context)
     route = _sharded_route(ctx)
     if route is not None:
         bsh, axes = route

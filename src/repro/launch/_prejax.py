@@ -1,0 +1,28 @@
+"""Pre-jax-import environment setup shared by the launch entry points.
+
+MUST stay importable without touching jax: `--simulated-devices N` has to
+reach ``XLA_FLAGS`` before jax initializes its backends, so
+``launch/train.py`` and ``launch/serve.py`` call this on raw ``sys.argv``
+at module top, before their ``import jax``. Handles both the
+space-separated and ``--simulated-devices=N`` spellings; a malformed value
+is left for argparse to reject with a proper usage error.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+
+def apply_simulated_devices(argv: Sequence[str]) -> None:
+    for i, arg in enumerate(argv):
+        if arg == "--simulated-devices" or arg.startswith(
+                "--simulated-devices="):
+            ndev = (arg.split("=", 1)[1] if "=" in arg
+                    else (argv[i + 1] if i + 1 < len(argv) else ""))
+            if ndev.isdigit() and int(ndev) > 0:
+                os.environ["XLA_FLAGS"] = (
+                    os.environ.get("XLA_FLAGS", "")
+                    + f" --xla_force_host_platform_device_count={int(ndev)}"
+                ).strip()
+            return

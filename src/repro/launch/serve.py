@@ -1,0 +1,139 @@
+"""Serving entrypoint: replay a synthetic request trace through the engine.
+
+    python -m repro.launch.serve --arch smollm-135m-smoke --requests 16 \
+        --slots 4 --max-new 16 --rate 20
+
+Generates a seeded Poisson-ish workload (exponential inter-arrival gaps at
+``--rate`` req/s, mixed prompt lengths), submits it through the async
+:class:`~repro.serve.client.ServeClient`, and prints per-request TTFT/TPOT
+plus the engine's JSON metrics snapshot. ``--checkpoint-dir`` restores the
+newest valid :mod:`repro.checkpoint` checkpoint (fresh init otherwise);
+``--mesh-shape 8`` serves over an 8-device ``("data",)`` mesh —
+``--simulated-devices 8`` simulates one on CPU.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+# Simulated multi-device serving: the host device count must reach XLA
+# before jax initializes (jax-free helper shared with launch/train.py).
+from repro.launch._prejax import apply_simulated_devices
+
+apply_simulated_devices(sys.argv)
+
+import numpy as np  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--arch", default="smollm-135m-smoke")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="number of synthetic requests to replay")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="per-slot budget: prompt + generated tokens")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--min-prompt", type=int, default=4)
+    ap.add_argument("--max-prompt", type=int, default=48)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="mean arrival rate (req/s); 0 = submit all "
+                         "up front")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-json", default="",
+                    help="write the engine metrics snapshot here")
+    ap.add_argument("--mesh-shape", default="",
+                    help="serve over a butterfly data mesh, e.g. '8' or "
+                         "'2x4' (requires a butterfly arch)")
+    ap.add_argument("--simulated-devices", type=int, default=0,
+                    help="force N simulated host devices (CPU). Handled "
+                         "before jax import.")
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.kernels.context import ExecutionContext
+    from repro.serve import SamplingParams, ServeClient, ServeEngine, loader
+
+    cfg = registry.get(args.arch)
+    context = None
+    if args.mesh_shape:
+        try:
+            shape = tuple(int(s) for s in args.mesh_shape.split("x"))
+            if not shape or any(s <= 0 for s in shape):
+                raise ValueError(shape)
+        except ValueError:
+            raise SystemExit(
+                f"invalid --mesh-shape {args.mesh_shape!r}: expected e.g. "
+                f"'8' (data mesh) or '2x4' (pod x data)")
+        context = ExecutionContext(mesh_shape=shape)
+
+    step, params = loader.load_for_serving(cfg, args.checkpoint_dir,
+                                           seed=args.seed)
+    src = f"checkpoint step {step}" if step is not None else "fresh init"
+    engine = ServeEngine(
+        cfg, params, slots=args.slots, max_len=args.max_len,
+        sampling=SamplingParams(temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p),
+        context=context, seed=args.seed)
+    print(f"[serve] {cfg.name} | params: {src} | slots={args.slots} "
+          f"max_len={args.max_len} sampling=(T={args.temperature}, "
+          f"k={args.top_k}, p={args.top_p})"
+          + (f" | mesh={engine.ctx.mesh_layout()}" if engine.mesh else ""))
+
+    rng = np.random.default_rng(args.seed)
+    hi = min(args.max_prompt, args.max_len - args.max_new)
+    if hi < args.min_prompt:
+        raise SystemExit(
+            f"no valid prompt length: min-prompt {args.min_prompt} > "
+            f"min(max-prompt {args.max_prompt}, max-len {args.max_len} - "
+            f"max-new {args.max_new}) = {hi}; raise --max-len or lower "
+            f"--max-new/--min-prompt")
+    lengths = rng.integers(args.min_prompt, hi + 1, size=args.requests)
+    def extras():
+        # frontend-stub archs (VLM / enc-dec audio): per-request
+        # precomputed embeddings, like the training pipeline's stubs
+        out = {}
+        if cfg.frontend == "vision":
+            out["frontend_embeds"] = rng.normal(
+                size=(1, cfg.frontend_tokens, cfg.d_model)).astype("float32")
+        if cfg.n_enc_layers:
+            out["frames"] = rng.normal(
+                size=(1, cfg.enc_seq, cfg.d_model)).astype("float32")
+        return out or None
+
+    futs = []
+    with ServeClient(engine) as client:
+        for i, plen in enumerate(lengths):
+            prompt = rng.integers(0, cfg.vocab_size, size=int(plen))
+            futs.append(client.submit(prompt, max_new_tokens=args.max_new,
+                                      extras=extras()))
+            if args.rate > 0 and i + 1 < args.requests:
+                time.sleep(rng.exponential(1.0 / args.rate))
+        for fut in futs:
+            r = fut.result(timeout=600)
+            m = r.metrics
+            print(f"  req[{r.rid:03d}] prompt={m.prompt_len:3d} "
+                  f"new={m.new_tokens:3d} ttft={m.ttft * 1e3:7.1f} ms "
+                  f"tpot={m.tpot * 1e3:6.1f} ms "
+                  f"latency={m.latency * 1e3:7.1f} ms")
+
+    snap = engine.metrics.snapshot()
+    print(f"[serve] {snap['requests_finished']} requests, "
+          f"{snap['total_tokens']} tokens | decode "
+          f"{snap['decode_tok_per_s']:.1f} tok/s | occupancy "
+          f"{snap['slot_occupancy']:.2f} | ttft p50/p95 "
+          f"{snap['ttft_ms']['p50']:.1f}/{snap['ttft_ms']['p95']:.1f} ms | "
+          f"compiles={engine.compile_stats['compiles']}")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=1)
+        print(f"[serve] wrote {args.metrics_json}")
+
+
+if __name__ == "__main__":
+    main()

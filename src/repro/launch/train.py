@@ -29,22 +29,12 @@ if "--xla-perf-flags" in os.sys.argv:
                                + _XLA_PERF_FLAGS).strip()
 
 # Simulated multi-device CPU run (--simulated-devices N): the host device
-# count must reach XLA before jax initializes, hence the pre-import argv
-# peek (mirrors the --xla-perf-flags pattern above). Handles both the
-# space-separated and --simulated-devices=N spellings; a malformed value is
-# left for argparse to reject with a proper usage error.
-for _i, _arg in enumerate(os.sys.argv):
-    if _arg == "--simulated-devices" or _arg.startswith(
-            "--simulated-devices="):
-        _ndev = (_arg.split("=", 1)[1] if "=" in _arg
-                 else (os.sys.argv[_i + 1]
-                       if _i + 1 < len(os.sys.argv) else ""))
-        if _ndev.isdigit() and int(_ndev) > 0:
-            os.environ["XLA_FLAGS"] = (
-                os.environ.get("XLA_FLAGS", "")
-                + f" --xla_force_host_platform_device_count={int(_ndev)}"
-            ).strip()
-        break
+# count must reach XLA before jax initializes, hence the pre-import peek
+# (mirrors the --xla-perf-flags pattern above; shared with launch/serve.py
+# via the jax-free _prejax helper).
+from repro.launch._prejax import apply_simulated_devices  # noqa: E402
+
+apply_simulated_devices(os.sys.argv)
 
 import jax  # noqa: E402  (after XLA_FLAGS)
 import numpy as np  # noqa: E402

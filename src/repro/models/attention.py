@@ -232,25 +232,37 @@ def attention(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
     v = constrain(v, kv_layout(cfg, mode))
 
     if mode == "decode" and not cross:
-        # write this step's KV into the cache (ring buffer if windowed)
+        # write this step's KV into the cache (ring buffer if windowed).
+        # cur_pos is a scalar (whole batch at one position) or a (B,) vector
+        # (per-slot decode: the serving engine's slot pool, where every
+        # request sits at its own absolute position).
         length = cache["k"].shape[1]
         slot = (cur_pos % length) if window > 0 else cur_pos
-        k_all = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        v_all = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        if jnp.ndim(slot) == 0:
+            k_all = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        else:
+            bidx = jnp.arange(B)
+            k_all = cache["k"].at[bidx, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_all = cache["v"].at[bidx, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
         new_cache = {"k": k_all, "v": v_all}
         kpos = jnp.arange(length)[None, :]
+        # (1, 1) for a scalar cur_pos, (B, 1) for per-slot positions — the
+        # masks below broadcast against kpos either way
+        cp = jnp.reshape(cur_pos, (-1, 1))
         if window > 0:
             # ring buffer: entry i holds absolute position p with
             # p % window == i and p <= cur_pos, p > cur_pos - window
-            base = cur_pos - (cur_pos % length)
+            base = cp - (cp % length)
             abs_pos = kpos + base
-            abs_pos = jnp.where(abs_pos > cur_pos, abs_pos - length, abs_pos)
-            valid = abs_pos >= jnp.maximum(0, cur_pos - window + 1)
+            abs_pos = jnp.where(abs_pos > cp, abs_pos - length, abs_pos)
+            valid = abs_pos >= jnp.maximum(0, cp - window + 1)
         else:
-            abs_pos = kpos
-            valid = kpos <= cur_pos
+            valid = kpos <= cp
         scale = D ** -0.5
         ka = k_all.astype(cd)
         va = v_all.astype(cd)
@@ -266,14 +278,24 @@ def attention(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
     if mode == "prefill":
         if window > 0 and not cross:
             ring = cache["k"].shape[1]
-            # keep the last `ring` positions in the ring buffer, aligned so
-            # that slot = pos % ring (matches the decode path)
-            start = Sq - ring
-            kw = jax.lax.dynamic_slice_in_dim(k, start, ring, axis=1)
-            vw = jax.lax.dynamic_slice_in_dim(v, start, ring, axis=1)
-            roll = (-start) % ring
-            kw = jnp.roll(kw, roll, axis=1)
-            vw = jnp.roll(vw, roll, axis=1)
+            if Sq >= ring:
+                # keep the last `ring` positions in the ring buffer, aligned
+                # so that slot = pos % ring (matches the decode path)
+                start = Sq - ring
+                kw = jax.lax.dynamic_slice_in_dim(k, start, ring, axis=1)
+                vw = jax.lax.dynamic_slice_in_dim(v, start, ring, axis=1)
+                roll = (-start) % ring
+                kw = jnp.roll(kw, roll, axis=1)
+                vw = jnp.roll(vw, roll, axis=1)
+            else:
+                # prompt shorter than the ring (short-prompt serving):
+                # position p lands at slot p (= p % ring) directly; the
+                # zero tail is never read — the decode validity mask only
+                # admits slots whose reconstructed abs position is <=
+                # cur_pos, and those get overwritten before qualifying
+                pad = [(0, 0), (0, ring - Sq), (0, 0), (0, 0)]
+                kw = jnp.pad(k, pad)
+                vw = jnp.pad(v, pad)
             new_cache = {"k": kw.astype(cache["k"].dtype),
                          "v": vw.astype(cache["v"].dtype)}
         else:

@@ -429,14 +429,100 @@ def prefill(cfg: ModelConfig, params: Dict, batch: Dict, caches: Dict
     return logits[:, 0], caches
 
 
+def prefill_at(cfg: ModelConfig, params: Dict, batch: Dict, caches: Dict,
+               last_pos: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """Bucketed prefill: right-padded prompts, logits read at ``last_pos``.
+
+    ``batch["tokens"]`` is ``(B, bucket)`` with each prompt right-padded to
+    the bucket length and ``last_pos (B,)`` the index of its last *real*
+    token. Causal attention makes the pad tail inert for every position
+    ``<= last_pos`` — each position's KV is a function of that position's
+    input alone, and no real position attends forward — so the caches this
+    fills are usable as-is for decode: the decode-side validity mask
+    (``kpos <= cur_pos``) never reaches a stale pad entry before the decode
+    loop has overwritten it. The one thing plain :func:`prefill` gets wrong
+    under padding is the readout position (its ``x[:, -1:]`` is a pad), so
+    this variant gathers the backbone output at ``last_pos`` per row
+    instead. NOT exact for architectures whose state mixes positions
+    sequentially (``rec``/``mlstm``/``slstm`` blocks) or windowed ring
+    buffers — the serving engine pads those archs to exact lengths instead
+    (:meth:`repro.serve.engine.ServeEngine.bucket_for`).
+    """
+    tokens = batch["tokens"]
+    x = embed_inputs(cfg, params, tokens, batch.get("frontend_embeds"))
+    x = constrain(x, ("batch", None, None))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = run_encoder(cfg, params, batch["frames"])
+    x, caches, _ = backbone(cfg, params, x, positions=positions,
+                            mode="prefill", caches=caches, enc_out=enc_out)
+    n_front = S - tokens.shape[1]          # prepended frontend tokens
+    idx = jnp.asarray(last_pos, jnp.int32) + n_front
+    x_last = x[jnp.arange(B), idx][:, None, :]
+    x_last = cm.rmsnorm(x_last, params["final_norm"], cfg.norm_eps)
+    logits = cm.head_apply(cfg, params["head"], params["embed"], x_last)
+    return logits[:, 0], caches
+
+
+# ---------------------------------------------------------------------------
+# Cache slot surgery (the serving engine's pool)
+# ---------------------------------------------------------------------------
+
+def write_cache_slot(cfg: ModelConfig, pool: Dict, sub: Dict,
+                     slot: jnp.ndarray) -> Dict:
+    """Insert a batch-1 cache tree into batch index ``slot`` of a pool.
+
+    ``pool`` and ``sub`` must come from :func:`init_caches` (or a prefill
+    thereof) with the same ``seq_len``; only the batch extent differs.
+    Unit-stack leaves carry batch at axis 1 (axis 0 is the scan repeat),
+    tail leaves at axis 0 — the same layout the chunked prefill scan in
+    :mod:`repro.train.steps` slices.
+    """
+    def upd(axis):
+        def f(p, s):
+            return jax.lax.dynamic_update_slice_in_dim(
+                p, s.astype(p.dtype), slot, axis)
+        return f
+
+    return {
+        "unit": jax.tree_util.tree_map(upd(1), pool["unit"], sub["unit"]),
+        "tail": jax.tree_util.tree_map(upd(0), pool["tail"], sub["tail"]),
+    }
+
+
+def reset_cache_slot(cfg: ModelConfig, pool: Dict, slot: jnp.ndarray,
+                     seq_len: int) -> Dict:
+    """Reset batch index ``slot`` of a cache pool to its init state.
+
+    ``seq_len`` must be the value the pool was built with (the text length
+    passed to :func:`init_caches` — NOT the frontend-extended total).
+    Freeing a slot is not required for correctness — admission overwrites
+    the whole slot via :func:`write_cache_slot` — but scrubbing keeps a
+    long-lived engine's pool free of dead request state (and of any
+    stale-read bug class a future cache layout change might introduce).
+    """
+    return write_cache_slot(cfg, pool, init_caches(cfg, 1, seq_len), slot)
+
+
 def decode_step(cfg: ModelConfig, params: Dict, token: jnp.ndarray,
                 caches: Dict, cur_pos: jnp.ndarray
                 ) -> Tuple[jnp.ndarray, Dict]:
-    """One decode step: token (B,) int32 at absolute position cur_pos."""
+    """One decode step: token (B,) int32 at absolute position ``cur_pos``.
+
+    ``cur_pos`` is a scalar (the whole batch decodes in lockstep) or a
+    ``(B,)`` vector — the serving engine's slot pool, where every request
+    sits at its own absolute position and the KV write/read masks are
+    per-slot (see :mod:`repro.serve.engine`).
+    """
     x = cm.embed(cfg, params["embed"], token[:, None])
     B = x.shape[0]
-    positions = jnp.broadcast_to(cur_pos[None, None], (B, 1)
-                                 ).astype(jnp.int32)
+    cur_pos = jnp.asarray(cur_pos, jnp.int32)
+    if cur_pos.ndim == 0:
+        positions = jnp.broadcast_to(cur_pos[None, None], (B, 1))
+    else:
+        positions = cur_pos[:, None]
     x, caches, _ = backbone(cfg, params, x, positions=positions,
                             mode="decode", caches=caches, cur_pos=cur_pos)
     x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)

@@ -1,0 +1,29 @@
+"""``repro.serve`` — continuous-batching inference for the butterfly LMs.
+
+    from repro.serve import ServeEngine, ServeClient, SamplingParams, loader
+
+    cfg = registry.get("smollm-135m-smoke")
+    step, params = loader.load_for_serving(cfg, checkpoint_dir)
+    engine = ServeEngine(cfg, params, slots=4, max_len=128)
+    with ServeClient(engine) as client:
+        fut = client.submit([1, 2, 3], max_new_tokens=16)
+        print(fut.result().tokens)
+
+See :mod:`repro.serve.engine` for the tick-loop / bucketing / compile-cache
+design, and ``python -m repro.launch.serve --help`` for the workload-replay
+CLI.
+"""
+
+from repro.serve import loader, metrics, sampling
+from repro.serve.client import ServeClient
+from repro.serve.engine import (CompileCache, GenerationResult, Request,
+                                ServeEngine)
+from repro.serve.metrics import EngineMetrics, RequestMetrics
+from repro.serve.sampling import GREEDY, SamplingParams, sample_logits
+
+__all__ = [
+    "ServeEngine", "ServeClient", "CompileCache", "Request",
+    "GenerationResult", "EngineMetrics", "RequestMetrics",
+    "SamplingParams", "GREEDY", "sample_logits",
+    "loader", "metrics", "sampling",
+]

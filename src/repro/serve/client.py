@@ -1,0 +1,94 @@
+"""In-process async client: ``submit() -> Future`` over a driver thread.
+
+The engine's tick loop is single-threaded by contract; the client owns that
+thread. ``submit()`` enqueues on the (thread-safe) engine and wakes the
+driver, which runs ticks while work exists and parks on an event when the
+engine drains — no busy-polling between bursts. Futures resolve to
+:class:`repro.serve.engine.GenerationResult` as requests finish, in
+completion (not submission) order, which is the whole point of continuous
+batching.
+
+    with ServeClient(engine) as client:
+        futs = [client.submit(p, max_new_tokens=16) for p in prompts]
+        results = [f.result(timeout=60) for f in futs]
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from typing import Dict, Optional, Sequence
+
+from repro.serve.engine import ServeEngine
+
+
+class ServeClient:
+    """Async facade over a :class:`ServeEngine` (one driver thread)."""
+
+    def __init__(self, engine: ServeEngine):
+        self.engine = engine
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        # serializes submit's stop-check+enqueue against the driver's
+        # post-exit sweep, so a submit racing close() either enqueues
+        # before the sweep (and gets failed by it) or observes the stop
+        # flag and raises — never a silently stranded future
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._drive,
+                                        name="serve-engine", daemon=True)
+        self._thread.start()
+
+    # -- public --------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16, *,
+               stop_token: Optional[int] = None,
+               extras: Optional[Dict] = None) -> Future:
+        with self._lock:
+            if self._stop.is_set():
+                raise RuntimeError("client is closed")
+            fut = self.engine.submit(prompt, max_new_tokens,
+                                     stop_token=stop_token, extras=extras)
+        self._wake.set()
+        return fut
+
+    def close(self, timeout: float = 60.0) -> None:
+        """Stop the driver thread after the engine drains its current
+        work; idempotent."""
+        self._stop.set()
+        self._wake.set()
+        self._thread.join(timeout=timeout)
+
+    def __enter__(self) -> "ServeClient":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # -- driver --------------------------------------------------------
+
+    def _drive(self) -> None:
+        exc: BaseException = RuntimeError("client is closed")
+        while True:
+            if self.engine.has_work():
+                try:
+                    self.engine.step()
+                except BaseException as e:
+                    # a dead driver must not strand futures: fail every
+                    # queued/in-flight request with the real error and
+                    # refuse further submissions (submit() raises once
+                    # _stop is set)
+                    self._stop.set()
+                    exc = e
+                    break
+                continue
+            if self._stop.is_set():
+                break
+            self._wake.wait(timeout=0.05)
+            self._wake.clear()
+        # post-exit sweep, serialized against submit: anything that raced
+        # its way into the queue after our last has_work() look resolves
+        # with an error instead of hanging until a result() timeout
+        with self._lock:
+            if self.engine.has_work():
+                self.engine.abort_all(exc)

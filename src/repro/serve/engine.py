@@ -1,0 +1,433 @@
+"""Continuous-batching inference engine for the butterfly LMs.
+
+The engine owns a fixed pool of ``slots`` decode lanes over ONE pooled
+cache tree (batch axis = slot index) and runs a strict tick loop:
+
+  1. **Admit** — while a slot is free and requests are queued, pop one,
+     right-pad its prompt to a power-of-two bucket and prefill it at batch 1
+     (:func:`repro.train.steps.make_bucket_prefill_step`); the prefilled
+     cache row is spliced into the pool at the slot index
+     (:func:`repro.models.lm.write_cache_slot`) and the first token is
+     sampled straight off the prefill logits — TTFT never waits for the
+     co-batched decode.
+  2. **Decode** — ONE fused pooled step
+     (:func:`repro.train.steps.make_pool_serve_step`) advances every active
+     slot by one token: per-slot positions, per-slot KV masks, per-slot
+     active masks. Finished slots (stop token or length budget) resolve
+     their futures and free immediately; the next tick's admission refills
+     them while the in-flight requests keep decoding — no stall, no
+     re-batching barrier.
+
+Compilation is explicit: every jitted function lives in a
+:class:`CompileCache` keyed on ``(kind, arch, bucket/batch, sampling,
+ExecutionContext)``, with a trace counter the tests gate on — admitting ten
+prompts that share a bucket compiles the prefill exactly once.
+
+The engine is ExecutionContext-native: it resolves ONE context at
+construction (explicit ``context=`` > ambient > the arch's
+``ButterflyConfig``), traces everything inside ``use_execution`` (plus
+``use_sharding`` when the context carries a mesh), so the same engine
+serves on one CPU or batch-shards its butterfly sites across an 8-device
+simulated mesh via :mod:`repro.runtime.butterfly_sharding`.
+
+Threading model: ``submit()`` is thread-safe; ``step()`` /
+``run_until_idle()`` must be driven from one thread (the
+:class:`repro.serve.client.ServeClient` wraps exactly that driver thread
+and hands out futures).
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import functools
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import context as exctx
+from repro.models import lm
+from repro.runtime import sharding as rsh
+from repro.serve import sampling as sampling_lib
+from repro.serve.metrics import EngineMetrics
+from repro.train import steps as steps_lib
+
+# Block types whose caches mix positions sequentially (recurrent state) or
+# ring-buffer by position: right-padded bucket prefill would fold the pads
+# into the state, so these archs prefill at exact prompt lengths instead
+# (one compile per distinct length — the trade the engine makes explicit).
+SEQUENTIAL_STATE_BLOCKS = ("rec", "mlstm", "slstm", "local")
+
+
+class CompileCache:
+    """Explicit jit cache with a trace counter.
+
+    ``get(key, build)`` memoizes the *compiled callable* per key;
+    :meth:`counted_jit` wraps the pre-jit function so every retrace bumps
+    ``traces[key]`` (the function body only executes while jax traces —
+    cached executions never touch it). The serving tests gate on exactly
+    this counter: one trace per (bucket, context), ever.
+    """
+
+    def __init__(self):
+        self._fns: Dict[Tuple, Callable] = {}
+        self.traces: Dict[Tuple, int] = {}
+
+    def get(self, key: Tuple, build: Callable[[], Callable]) -> Callable:
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = build()
+        return fn
+
+    def counted_jit(self, key: Tuple, fn: Callable, **jit_kw) -> Callable:
+        def traced(*args, **kwargs):
+            self.traces[key] = self.traces.get(key, 0) + 1
+            return fn(*args, **kwargs)
+        return jax.jit(traced, **jit_kw)
+
+    @property
+    def compiles(self) -> int:
+        return len(self._fns)
+
+    def keys(self) -> List[Tuple]:
+        return list(self._fns)
+
+
+@dataclass
+class Request:
+    """One queued generation request."""
+
+    rid: int
+    prompt: np.ndarray                     # (prompt_len,) int32
+    max_new_tokens: int
+    stop_token: Optional[int] = None
+    extras: Optional[Dict] = None          # frontend_embeds / frames
+    future: Future = field(default_factory=Future)
+
+
+@dataclass
+class GenerationResult:
+    """What a request's future resolves to."""
+
+    rid: int
+    prompt: np.ndarray
+    tokens: List[int]                      # all generated tokens, in order
+    metrics: object                        # RequestMetrics
+
+
+@dataclass
+class _Slot:
+    """Host-side state of one occupied decode lane."""
+
+    req: Request
+    tokens: List[int]                      # generated so far (>= 1)
+    cur_pos: int                           # absolute cache write position
+    last_token: int
+
+
+class ServeEngine:
+    """Continuous-batching engine over a fixed decode-slot pool.
+
+    * ``slots`` — decode lanes (the pooled batch size of the serve step).
+    * ``max_len`` — per-slot token budget: every request must satisfy
+      ``prompt_len + max_new_tokens <= max_len`` (the pooled caches are
+      allocated once at this length).
+    * ``sampling`` — engine-wide :class:`SamplingParams` (a trace-time
+      constant of the serve step; greedy by default).
+    * ``context`` — execution policy; resolved once here, exactly like the
+      ``Trainer`` (explicit > ambient > ``cfg.butterfly`` > env/platform).
+    * ``scrub_freed_slots`` — re-init a slot's cache row when its request
+      finishes (:func:`repro.models.lm.reset_cache_slot`); off by default
+      since admission overwrites the full row anyway.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 128,
+                 sampling: sampling_lib.SamplingParams = sampling_lib.GREEDY,
+                 context: exctx.ContextLike = None, seed: int = 0,
+                 min_bucket: int = 8, scrub_freed_slots: bool = False):
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = int(max_len)
+        self.sampling = sampling
+        self.min_bucket = int(min_bucket)
+        self.scrub_freed_slots = scrub_freed_slots
+        self.ctx = exctx.resolve_execution(
+            context,
+            default=exctx.ExecutionContext.from_butterfly_config(
+                cfg.butterfly))
+        self.mesh = self.ctx.mesh
+        self._params = params
+        self._n_front = (cfg.frontend_tokens if cfg.frontend == "vision"
+                         else 0)
+        types = set(cfg.block_unit) | set(cfg.tail_layers)
+        self._exact_buckets = bool(types & set(SEQUENTIAL_STATE_BLOCKS))
+        self._caches = lm.init_caches(cfg, slots, self.max_len)
+        self._slots: List[Optional[_Slot]] = [None] * slots
+        self._queue: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(seed)
+        self.compile_cache = CompileCache()
+        self.metrics = EngineMetrics(slots=slots)
+        self._sample_fn = functools.partial(sampling_lib.sample_logits,
+                                            params=sampling)
+
+    # -- execution scope ----------------------------------------------
+
+    def _scope(self):
+        """Ambient contexts live whenever a jitted fn may (re)trace: the
+        frozen ExecutionContext, plus the sharding ctx for a mesh — the
+        Trainer's exact pattern."""
+        stack = contextlib.ExitStack()
+        stack.enter_context(exctx.use_execution(self.ctx))
+        if self.mesh is not None:
+            stack.enter_context(rsh.use_sharding(self.mesh))
+        return stack
+
+    # -- compiled steps ------------------------------------------------
+
+    def bucket_for(self, prompt_len: int) -> int:
+        """Prefill bucket for a prompt: next power of two (>= min_bucket,
+        <= max_len), or the exact length for sequential-state archs where
+        padded prefill would corrupt the state."""
+        if self._exact_buckets:
+            return prompt_len
+        b = self.min_bucket
+        while b < prompt_len:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _prefill_fn(self, bucket: int) -> Callable:
+        key = ("prefill", self.cfg.name, bucket, 1, self.ctx)
+        return self.compile_cache.get(key, lambda: (
+            self.compile_cache.counted_jit(
+                key, steps_lib.make_bucket_prefill_step(self.cfg,
+                                                        self.max_len))))
+
+    def _decode_fn(self) -> Callable:
+        key = ("decode", self.cfg.name, self.slots, self.sampling, self.ctx)
+        return self.compile_cache.get(key, lambda: (
+            self.compile_cache.counted_jit(
+                key,
+                steps_lib.make_pool_serve_step(self.cfg, self._sample_fn),
+                donate_argnums=(2,))))
+
+    def _insert_fn(self) -> Callable:
+        key = ("insert", self.cfg.name, self.slots, self.ctx)
+        return self.compile_cache.get(key, lambda: (
+            self.compile_cache.counted_jit(
+                key,
+                lambda pool, sub, slot: lm.write_cache_slot(
+                    self.cfg, pool, sub, slot),
+                donate_argnums=(0,))))
+
+    def _reset_fn(self) -> Callable:
+        key = ("reset", self.cfg.name, self.slots, self.ctx)
+        return self.compile_cache.get(key, lambda: (
+            self.compile_cache.counted_jit(
+                key,
+                lambda pool, slot: lm.reset_cache_slot(
+                    self.cfg, pool, slot, self.max_len),
+                donate_argnums=(0,))))
+
+    def _first_token_fn(self) -> Callable:
+        key = ("sample", self.cfg.name, self.sampling, self.ctx)
+        return self.compile_cache.get(key, lambda: (
+            self.compile_cache.counted_jit(key, self._sample_fn)))
+
+    # -- client surface ------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16, *,
+               stop_token: Optional[int] = None,
+               extras: Optional[Dict] = None) -> Future:
+        """Queue a request; returns a future resolving to a
+        :class:`GenerationResult`. Thread-safe."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new_tokens}")
+        if prompt.size + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt_len {prompt.size} + max_new_tokens "
+                f"{max_new_tokens} exceeds the engine's per-slot budget "
+                f"max_len={self.max_len}")
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            req = Request(rid=rid, prompt=prompt,
+                          max_new_tokens=int(max_new_tokens),
+                          stop_token=stop_token, extras=extras)
+            self.metrics.on_submit(rid, prompt.size)
+            self._queue.append(req)
+        return req.future
+
+    def has_work(self) -> bool:
+        with self._lock:
+            queued = bool(self._queue)
+        return queued or any(s is not None for s in self._slots)
+
+    def abort_all(self, exc: BaseException) -> None:
+        """Fail every queued and in-flight request with ``exc``.
+
+        The crash path: when a tick raises (bad extras, an arch the pool
+        can't serve, a device error), whoever drives the loop calls this so
+        every outstanding future resolves with the real error instead of
+        hanging until its timeout. The pool is left empty; the engine
+        itself stays usable for new submissions.
+        """
+        with self._lock:
+            dead = list(self._queue)
+            self._queue.clear()
+        for i, s in enumerate(self._slots):
+            if s is not None:
+                self._slots[i] = None
+                dead.append(s.req)
+        for req in dead:
+            self.metrics.requests.pop(req.rid, None)
+            if not req.future.done():
+                req.future.set_exception(exc)
+
+    def active_requests(self) -> List[int]:
+        return [s.req.rid for s in self._slots if s is not None]
+
+    @property
+    def compile_stats(self) -> Dict:
+        return {"compiles": self.compile_cache.compiles,
+                "traces": dict(self.compile_cache.traces)}
+
+    def reset_metrics(self) -> None:
+        """Fresh metrics (tick clock included) without touching compiled
+        state or the pool — a benchmark warms every bucket, resets, then
+        measures a compile-free steady state. Only valid while no request
+        is in flight (in-flight RequestMetrics would be orphaned)."""
+        if self.has_work():
+            raise RuntimeError("reset_metrics with requests in flight")
+        self.metrics = EngineMetrics(
+            slots=self.slots,
+            max_request_history=self.metrics.max_request_history)
+
+    # -- the tick loop -------------------------------------------------
+
+    def step(self) -> int:
+        """One engine tick: admit into free slots, then one pooled decode.
+        Returns the number of slots still active after the tick."""
+        self._admit()
+        if any(s is not None for s in self._slots):
+            self._decode_tick()
+        self.metrics.ticks += 1
+        return sum(s is not None for s in self._slots)
+
+    def run_until_idle(self, max_ticks: int = 100_000) -> int:
+        """Drive ticks until queue and pool drain; returns ticks spent."""
+        start = self.metrics.ticks
+        while self.has_work():
+            self.step()
+            if self.metrics.ticks - start > max_ticks:
+                raise RuntimeError(
+                    f"engine did not drain within {max_ticks} ticks "
+                    f"(active={self.active_requests()})")
+        return self.metrics.ticks - start
+
+    # -- internals -----------------------------------------------------
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def _admit(self) -> None:
+        while True:
+            idx = self._free_slot()
+            if idx is None:
+                return
+            with self._lock:
+                if not self._queue:
+                    return
+                req = self._queue.popleft()
+            self._admit_one(req, idx)
+
+    def _admit_one(self, req: Request, idx: int) -> None:
+        plen = int(req.prompt.size)
+        bucket = self.bucket_for(plen)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :plen] = req.prompt
+        batch = {"tokens": jnp.asarray(tokens)}
+        if req.extras:
+            batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+        last_pos = jnp.asarray([plen - 1], jnp.int32)
+        t0 = time.monotonic()
+        with self._scope():
+            logits, sub = self._prefill_fn(bucket)(self._params, batch,
+                                                   last_pos)
+            self._caches = self._insert_fn()(
+                self._caches, sub, jnp.asarray(idx, jnp.int32))
+            tok = int(self._first_token_fn()(
+                logits, jax.random.fold_in(self._key, req.rid))[0])
+        self.metrics.on_admit(req.rid, plen, time.monotonic() - t0)
+        slot = _Slot(req=req, tokens=[tok],
+                     cur_pos=self._n_front + plen, last_token=tok)
+        self._slots[idx] = slot
+        if self._finished(slot):
+            self._finish(idx)
+
+    def _finished(self, slot: _Slot) -> bool:
+        if len(slot.tokens) >= slot.req.max_new_tokens:
+            return True
+        stop = slot.req.stop_token
+        return stop is not None and slot.last_token == stop
+
+    def _finish(self, idx: int) -> None:
+        slot = self._slots[idx]
+        self._slots[idx] = None
+        rm = self.metrics.on_finish(slot.req.rid)
+        if self.scrub_freed_slots:
+            with self._scope():
+                self._caches = self._reset_fn()(
+                    self._caches, jnp.asarray(idx, jnp.int32))
+        slot.req.future.set_result(GenerationResult(
+            rid=slot.req.rid, prompt=slot.req.prompt,
+            tokens=list(slot.tokens), metrics=rm))
+
+    def _decode_tick(self) -> None:
+        tokens = np.zeros((self.slots,), np.int32)
+        cur_pos = np.zeros((self.slots,), np.int32)
+        active = np.zeros((self.slots,), bool)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            tokens[i] = s.last_token
+            cur_pos[i] = s.cur_pos
+            active[i] = True
+        n_active = int(active.sum())
+        rng = jax.random.fold_in(self._key, 0x5E57E9 + self.metrics.ticks)
+        t0 = time.monotonic()
+        with self._scope():
+            nxt, self._caches = self._decode_fn()(
+                self._params, jnp.asarray(tokens), self._caches,
+                jnp.asarray(cur_pos), rng, jnp.asarray(active))
+        nxt = np.asarray(nxt)
+        self.metrics.on_decode_tick(n_active, n_active,
+                                    time.monotonic() - t0)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            tok = int(nxt[i])
+            s.tokens.append(tok)
+            s.last_token = tok
+            s.cur_pos += 1
+            self.metrics.on_token(s.req.rid)
+            if self._finished(s):
+                self._finish(i)

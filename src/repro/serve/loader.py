@@ -1,0 +1,64 @@
+"""Engine parameter loading: checkpoint restore or fresh init.
+
+Two entry points:
+
+* :func:`restore_params` — newest-valid checkpoint from a
+  :mod:`repro.checkpoint` directory (the Trainer's save layout: a
+  ``{"params": ..., "opt": ...}`` tree; only the ``params`` subtree is
+  read). Torn or corrupt checkpoints fall back to the next older valid one
+  — the engine inherits the checkpoint subsystem's crash-safety contract
+  for free.
+* :func:`load_for_serving` — the CLI/engine convenience: restore when a
+  directory is given and holds a valid checkpoint, else fresh-init (smoke
+  runs, benchmarks).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointing import load_latest
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.runtime import pytree as pt
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict:
+    """Fresh engine params (the smoke-run path)."""
+    return pt.init_params(jax.random.PRNGKey(seed), lm.model_specs(cfg))
+
+
+def restore_params(cfg: ModelConfig, directory: str, *,
+                   step: Optional[int] = None
+                   ) -> Tuple[Optional[int], Optional[Dict]]:
+    """Load model params from the newest valid checkpoint in ``directory``.
+
+    Returns ``(step, params)`` — or ``(None, None)`` when the directory
+    holds no restorable checkpoint (every candidate torn/corrupt/absent).
+    The restore template is built from the arch's ParamSpecs, so shapes and
+    tree structure are validated implicitly: a checkpoint from a different
+    arch fails its candidate and falls through to older ones.
+    """
+    template = init_params(cfg, seed=0)
+    s, tree, _extra = load_latest(directory, {"params": template}, step=step)
+    if s is None:
+        return None, None
+    params = jax.tree_util.tree_map(
+        lambda t, a: jnp.asarray(a, t.dtype) if a is not None else None,
+        template, tree["params"], is_leaf=lambda x: x is None)
+    return s, params
+
+
+def load_for_serving(cfg: ModelConfig, checkpoint_dir: str = "", *,
+                     seed: int = 0) -> Tuple[Optional[int], Dict]:
+    """Params for a :class:`~repro.serve.engine.ServeEngine`: newest valid
+    checkpoint when ``checkpoint_dir`` is set and restorable, else fresh
+    init. Returns ``(restored_step_or_None, params)``."""
+    if checkpoint_dir:
+        step, params = restore_params(cfg, checkpoint_dir)
+        if params is not None:
+            return step, params
+    return None, init_params(cfg, seed=seed)

@@ -1,0 +1,190 @@
+"""Serving metrics: per-request latency decomposition + engine counters.
+
+Two clocks run through every record:
+
+* **wall time** (``time.monotonic``) — what an operator cares about: TTFT,
+  TPOT, end-to-end latency, steady-state tokens/s.
+* **engine ticks** — the deterministic clock the tests assert against:
+  one tick = one :meth:`ServeEngine.step` (admissions + one pooled decode).
+  Tick ordering proves scheduling properties (continuous batching, slot
+  refill) without depending on machine speed.
+
+``EngineMetrics.snapshot()`` returns a plain-JSON dict (the CLI's
+``--metrics-json`` artifact and the serving benchmark both consume it).
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+
+@dataclass
+class RequestMetrics:
+    """Lifecycle of one request through the engine."""
+
+    rid: int
+    prompt_len: int
+    submit_t: float
+    submit_tick: int
+    admit_t: float = 0.0
+    admit_tick: int = -1
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
+    finish_tick: int = -1
+    new_tokens: int = 0
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (s): submit -> first sampled token (which the
+        engine emits at admission, straight off the prefill logits)."""
+        return self.first_token_t - self.submit_t
+
+    @property
+    def tpot(self) -> float:
+        """Time per output token (s) across the decode phase; 0 for
+        single-token requests."""
+        if self.new_tokens <= 1:
+            return 0.0
+        return (self.finish_t - self.first_token_t) / (self.new_tokens - 1)
+
+    @property
+    def latency(self) -> float:
+        return self.finish_t - self.submit_t
+
+    def to_dict(self) -> Dict:
+        return {
+            "rid": self.rid, "prompt_len": self.prompt_len,
+            "new_tokens": self.new_tokens,
+            "ttft_ms": round(self.ttft * 1e3, 3),
+            "tpot_ms": round(self.tpot * 1e3, 3),
+            "latency_ms": round(self.latency * 1e3, 3),
+            "queue_ticks": self.admit_tick - self.submit_tick,
+            "admit_tick": self.admit_tick, "finish_tick": self.finish_tick,
+        }
+
+
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile on a pre-sorted list (no numpy dependency in
+    the snapshot path)."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+@dataclass
+class EngineMetrics:
+    """Engine-level counters, accumulated by :class:`ServeEngine`.
+
+    Memory is bounded for a long-lived engine: only *in-flight* requests
+    live in ``requests``; finished ones move into a
+    ``max_request_history``-bounded deque (their :class:`RequestMetrics`
+    object stays alive on the caller's ``GenerationResult`` regardless),
+    while the lifetime totals (``requests_finished`` / ``finished_tokens``)
+    keep counting. Percentiles in :meth:`snapshot` are therefore over the
+    most recent ``max_request_history`` finished requests.
+    """
+
+    slots: int
+    max_request_history: int = 1024
+    ticks: int = 0
+    decode_steps: int = 0
+    decode_tokens: int = 0           # tokens emitted by pooled decode ticks
+    prefill_tokens: int = 0          # prompt tokens processed (pre-padding)
+    prefills: int = 0
+    occupied_slot_ticks: int = 0     # Σ active slots over decode ticks
+    decode_time_s: float = 0.0       # wall time inside pooled decode calls
+    prefill_time_s: float = 0.0      # wall time inside prefill calls
+    requests_finished: int = 0       # lifetime total
+    finished_tokens: int = 0         # lifetime total over finished requests
+    requests: Dict[int, RequestMetrics] = field(default_factory=dict)
+    clock: object = time.monotonic
+
+    def __post_init__(self):
+        self._history: Deque[RequestMetrics] = collections.deque(
+            maxlen=self.max_request_history)
+
+    # -- recording (engine-internal) -----------------------------------
+
+    def request(self, rid: int) -> Optional[RequestMetrics]:
+        return self.requests.get(rid)
+
+    def on_submit(self, rid: int, prompt_len: int) -> RequestMetrics:
+        rm = RequestMetrics(rid=rid, prompt_len=prompt_len,
+                            submit_t=self.clock(), submit_tick=self.ticks)
+        self.requests[rid] = rm
+        return rm
+
+    def on_admit(self, rid: int, prompt_len: int, dt: float) -> None:
+        rm = self.requests[rid]
+        rm.admit_t = self.clock()
+        rm.admit_tick = self.ticks
+        rm.first_token_t = rm.admit_t     # first token rides the prefill
+        rm.new_tokens = 1
+        self.prefills += 1
+        self.prefill_tokens += prompt_len
+        self.prefill_time_s += dt
+
+    def on_decode_tick(self, active_slots: int, new_tokens: int,
+                       dt: float) -> None:
+        self.decode_steps += 1
+        self.occupied_slot_ticks += active_slots
+        self.decode_tokens += new_tokens
+        self.decode_time_s += dt
+
+    def on_token(self, rid: int) -> None:
+        self.requests[rid].new_tokens += 1
+
+    def on_finish(self, rid: int) -> RequestMetrics:
+        """Finalize + evict a request's record (bounded-history move);
+        returns it so the engine can attach it to the GenerationResult."""
+        rm = self.requests.pop(rid)
+        rm.finish_t = self.clock()
+        rm.finish_tick = self.ticks
+        self._history.append(rm)
+        self.requests_finished += 1
+        self.finished_tokens += rm.new_tokens
+        return rm
+
+    # -- reporting -----------------------------------------------------
+
+    def finished(self) -> List[RequestMetrics]:
+        """The most recent ``max_request_history`` finished requests."""
+        return list(self._history)
+
+    def snapshot(self) -> Dict:
+        """JSON-able summary: throughput, latency percentiles, occupancy.
+        Percentiles and the per-request list cover the bounded recent
+        window; the ``requests_finished``/``total_tokens`` counters are
+        lifetime totals."""
+        done = self.finished()
+        ttfts = sorted(r.ttft for r in done)
+        tpots = sorted(r.tpot for r in done if r.new_tokens > 1)
+        occupancy = (self.occupied_slot_ticks
+                     / (self.slots * max(1, self.decode_steps)))
+        return {
+            "slots": self.slots,
+            "ticks": self.ticks,
+            "requests_finished": self.requests_finished,
+            "prefills": self.prefills,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_steps": self.decode_steps,
+            "decode_tokens": self.decode_tokens,
+            "total_tokens": self.finished_tokens,
+            "decode_tok_per_s": (self.decode_tokens / self.decode_time_s
+                                 if self.decode_time_s else 0.0),
+            "slot_occupancy": round(occupancy, 4),
+            "ttft_ms": {
+                "p50": round(_percentile(ttfts, 0.50) * 1e3, 3),
+                "p95": round(_percentile(ttfts, 0.95) * 1e3, 3),
+            },
+            "tpot_ms": {
+                "p50": round(_percentile(tpots, 0.50) * 1e3, 3),
+                "p95": round(_percentile(tpots, 0.95) * 1e3, 3),
+            },
+            "requests": [r.to_dict() for r in
+                         sorted(done, key=lambda r: r.rid)],
+        }

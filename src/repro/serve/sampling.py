@@ -1,0 +1,83 @@
+"""Token sampling for the serving engine: greedy / temperature / top-k /
+top-p as ONE pure, jittable function.
+
+:class:`SamplingParams` is frozen and hashable, so it is safe to close over
+in jit and to key the engine's ``CompileCache`` on — switching sampling
+policy recompiles the serve step (by design: the policy is a trace-time
+constant, not a per-call branch). ``temperature == 0`` means greedy, in
+which case the ``rng`` argument is ignored and no randomness enters the
+trace at all (the oracle-parity tests rely on this).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Sampling policy for one engine (trace-time constant).
+
+    * ``temperature`` — ``0.0`` = greedy argmax; ``> 0`` scales logits
+      before sampling.
+    * ``top_k`` — ``0`` = disabled; else restrict to the k highest logits.
+    * ``top_p`` — ``1.0`` = disabled; else nucleus sampling: keep the
+      smallest prefix of the probability-sorted vocab whose mass reaches
+      ``top_p`` (the first token is always kept).
+
+    ``top_k`` and ``top_p`` compose (k-filter first, then nucleus), matching
+    the common serving-stack convention.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def sample_logits(logits: jnp.ndarray, rng, params: SamplingParams
+                  ) -> jnp.ndarray:
+    """Sample token ids from ``logits (..., V)`` under ``params``.
+
+    Pure and jittable; ``params`` must be static (close over it or pass it
+    via ``functools.partial`` — it is not a traced argument). Greedy ignores
+    ``rng`` (pass anything, including None).
+    """
+    if params.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / params.temperature
+    if params.top_k:
+        kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, NEG_INF, logits)
+    if params.top_p < 1.0:
+        order = jnp.argsort(-logits, axis=-1)
+        sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep every token whose preceding mass is < top_p: the first token
+        # over the threshold stays, everything after it goes
+        keep_sorted = (cum - probs) < params.top_p
+        inv = jnp.argsort(order, axis=-1)
+        keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+        logits = jnp.where(keep, logits, NEG_INF)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

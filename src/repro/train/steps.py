@@ -149,10 +149,71 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
     return step
 
 
-def make_serve_step(cfg: ModelConfig) -> Callable:
-    """The dry-run ``serve_step``: one greedy token given a filled cache."""
-    def step(params, token, caches, cur_pos):
+def make_serve_step(cfg: ModelConfig,
+                    sample_fn: Optional[Callable] = None) -> Callable:
+    """The ``serve_step``: one token given a filled cache.
+
+    Without ``sample_fn`` this is the dry-run's greedy step with the
+    historical ``step(params, token, caches, cur_pos)`` signature. With a
+    ``sample_fn(logits, rng) -> tokens`` (e.g. a bound
+    :func:`repro.serve.sampling.sample_logits`) the returned step grows an
+    ``rng`` argument and samples instead of argmaxing.
+    """
+    if sample_fn is None:
+        def step(params, token, caches, cur_pos):
+            logits, caches = lm.decode_step(cfg, params, token, caches,
+                                            cur_pos)
+            next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_token, logits, caches
+        return step
+
+    def sampled_step(params, token, caches, cur_pos, rng):
         logits, caches = lm.decode_step(cfg, params, token, caches, cur_pos)
-        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        next_token = sample_fn(logits, rng)
         return next_token, logits, caches
+    return sampled_step
+
+
+def make_bucket_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    """Prefill for the serving engine's bucketed admission path.
+
+    Returns ``step(params, batch, last_pos) -> (logits, caches)``:
+    ``batch["tokens"]`` is right-padded to a bucket length, ``last_pos (B,)``
+    indexes each prompt's last real token, and the caches — built fresh
+    inside the step at the engine's pool length ``max_len``, so jit never
+    sees (or needs donation discipline for) a caller-held buffer — come out
+    at full pool length ready for :func:`repro.models.lm.write_cache_slot`.
+    One jit compilation per (bucket, batch) shape; the engine's
+    ``CompileCache`` keys on exactly that.
+    """
+    def step(params, batch, last_pos):
+        caches = lm.init_caches(cfg, batch["tokens"].shape[0], max_len)
+        return lm.prefill_at(cfg, params, batch, caches, last_pos)
+    return step
+
+
+def make_pool_serve_step(cfg: ModelConfig,
+                         sample_fn: Optional[Callable] = None) -> Callable:
+    """One decode tick over a serving engine's whole slot pool.
+
+    ``step(params, tokens, caches, cur_pos, rng, active) -> (next, caches)``
+    with everything per-slot: ``tokens (S,)`` each slot's previous token,
+    ``cur_pos (S,)`` each slot's absolute write position (vector decode —
+    see :func:`repro.models.lm.decode_step`), ``active (S,)`` bool masking
+    slots that hold a live request. Inactive slots are computed but inert:
+    their sampled token is replaced by their input token (so host-side slot
+    state never moves) and whatever they write into their own cache row is
+    dead — admission overwrites the full row. Slots are independent along
+    the batch axis end to end, which is what makes engine outputs match the
+    single-request oracle regardless of co-batched neighbors.
+    """
+    def step(params, tokens, caches, cur_pos, rng, active):
+        logits, caches = lm.decode_step(cfg, params, tokens, caches,
+                                        cur_pos)
+        if sample_fn is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = sample_fn(logits, rng)
+        nxt = jnp.where(active, nxt, tokens)
+        return nxt, caches
     return step

@@ -6,14 +6,15 @@ beats the ambient ``use_execution`` block, which beats the config/default
 layer (``ButterflyConfig`` via ``from_butterfly_config``), which beats the
 ``REPRO_*`` env vars, which beat the autotuner/platform default. Plus: the
 once-per-process env read behind ``resolve_backend`` (and its documented
-``clear_backend_cache``), the legacy-kwarg shim, and context composition.
+``clear_backend_cache``), context composition, and — now that the
+one-release deprecation shim is removed — that the old loose kwargs are
+rejected outright.
 """
 
 import warnings
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import ButterflyConfig
@@ -209,84 +210,31 @@ def test_concrete_backend_skips_env(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shim: old loose kwargs still work, but warn
+# Post-shim surface: the loose kwargs are gone for good
 # ---------------------------------------------------------------------------
 
-def _warns_deprecated():
-    return pytest.warns(DeprecationWarning, match="deprecated")
-
-
-def test_ops_legacy_kwargs_warn_and_match_context_path():
-    n = 32
-    w = bf.fjlt_weights(jax.random.PRNGKey(0), n)
-    x = jax.random.normal(jax.random.PRNGKey(1), (5, n))
-    want = kops.butterfly_apply(x, w, context="jnp")
-    with _warns_deprecated():
-        got = kops.butterfly_apply(x, w, backend="jnp")
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
-
-
-def test_layer_legacy_kwargs_warn_and_match_context_path():
-    spec = bl.make_spec(jax.random.PRNGKey(2), 24, 40, use_bias=True)
-    params = bl.init_butterfly_linear(jax.random.PRNGKey(3), spec)
-    x = jax.random.normal(jax.random.PRNGKey(4), (3, 24))
-    want = bl.butterfly_linear_apply(spec, params, x,
-                                     context="pallas_interpret")
-    with _warns_deprecated():
-        got = bl.butterfly_linear_apply(spec, params, x,
-                                        backend="pallas_interpret",
-                                        block_b=4, segment=1)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-5, atol=1e-5)
-
-
-def test_encdec_legacy_kwargs_warn():
-    from repro.core import encdec
-    spec = encdec.make_spec(jax.random.PRNGKey(5), n=20, d=6, k=2)
-    params = encdec.init_params(jax.random.PRNGKey(6), spec)
-    X = jax.random.normal(jax.random.PRNGKey(7), (20, 6))
-    want = encdec.loss_fn(spec, params, X, X, context="jnp")
-    with _warns_deprecated():
-        got = encdec.loss_fn(spec, params, X, X, backend="jnp")
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
-
-
-def test_legacy_mesh_kwarg_routes_through_sharding():
-    from repro.launch.mesh import simulated_mesh
-    mesh = simulated_mesh(8)
-    n = 32
-    w = bf.random_weights(jax.random.PRNGKey(8), n)
-    x = jax.random.normal(jax.random.PRNGKey(9), (11, n))
-    want = kops.butterfly_apply(x, w, context="jnp")
-    with _warns_deprecated():
-        got = kops.butterfly_apply(x, w, backend="jnp", mesh=mesh)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-5, atol=1e-5)
-
-
-def test_explicit_context_beats_legacy_kwargs():
-    n = 16
-    w = bf.fjlt_weights(jax.random.PRNGKey(10), n)
-    x = jax.random.normal(jax.random.PRNGKey(11), (4, n))
-    with _warns_deprecated():
-        got = kops.butterfly_apply(x, w, context="jnp",
-                                   backend="pallas_interpret")
-    np.testing.assert_allclose(
-        np.asarray(got),
-        np.asarray(kops.butterfly_apply(x, w, context="jnp")))
-
-
-def test_unknown_kwarg_still_raises_type_error():
+def test_legacy_kwargs_are_rejected():
+    """The one-release deprecation shim is removed: the old loose execution
+    kwargs (and any other unknown kwarg) fail with a plain TypeError
+    instead of warning-and-working."""
     n = 16
     w = bf.fjlt_weights(jax.random.PRNGKey(12), n)
     x = jax.random.normal(jax.random.PRNGKey(13), (2, n))
     with pytest.raises(TypeError, match="unexpected keyword"):
+        kops.butterfly_apply(x, w, backend="jnp")
+    with pytest.raises(TypeError, match="unexpected keyword"):
         kops.butterfly_apply(x, w, not_a_kwarg=1)
+    spec = bl.make_spec(jax.random.PRNGKey(2), 24, 40)
+    params = bl.init_butterfly_linear(jax.random.PRNGKey(3), spec)
+    xs = jax.random.normal(jax.random.PRNGKey(4), (3, 24))
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        bl.butterfly_linear_apply(spec, params, xs, block_b=4, segment=1)
+    assert not hasattr(exctx, "apply_legacy")
 
 
 def test_context_api_emits_no_deprecation_warnings():
-    """First-party surface is shim-free: pure-context calls never warn
-    (the CI examples step enforces the same with -W error)."""
+    """First-party surface never warns: pure-context calls are the only
+    surface (the CI examples step enforces the same with -W error)."""
     n = 16
     w = bf.fjlt_weights(jax.random.PRNGKey(14), n)
     x = jax.random.normal(jax.random.PRNGKey(15), (2, n))
