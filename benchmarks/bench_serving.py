@@ -6,17 +6,24 @@ gaps only add noise) through a greedy :class:`repro.serve.ServeEngine` on
 the smoke arch and emits:
 
 * ``serve/trace_e2e`` — wall µs to drain the whole fixed seeded trace on a
-  warmed engine (the timed row the regression gate covers: per-token decode
-  is a few hundred µs on this arch, under ``diff.py``'s noise floor, while
-  the trace wall time sits comfortably above it and covers admission +
-  scheduling + decode together); µs/token, tokens/s, p50/p95 TTFT and slot
-  occupancy ride the derived column;
+  warmed *dense-pool* engine (the timed row the regression gate covers:
+  per-token decode is a few hundred µs on this arch, under ``diff.py``'s
+  noise floor, while the trace wall time sits comfortably above it and
+  covers admission + scheduling + decode together); µs/token, tokens/s,
+  p50/p95 TTFT and slot occupancy ride the derived column. Dense keeps the
+  row comparable across the pool redesign;
+* ``serve/paged_e2e`` — the same drain over the default *paged* pool with
+  chunked prefill, on a deliberately mixed long/short trace (half the
+  prompts span multiple prefill chunks, half fit in one), so the row times
+  the page-table gather path plus chunk/decode tick interleaving; pages
+  high-water-mark rides the derived column;
 * ``serve/large_pool`` — the 16-slot variant, emitted as *skipped* on CPU
   (one tick is minutes of wall clock at that batch) and timed on TPU.
 
 Compile time is excluded from the steady-state number by warming every
-bucket and the pooled decode step with a burn-in trace first — the engine's
-CompileCache makes "warm" checkable rather than hoped-for.
+trace shape (buckets for dense; the chunk + decode steps for paged) with a
+burn-in trace first — the engine's CompileCache makes "warm" checkable
+rather than hoped-for.
 """
 
 from __future__ import annotations
@@ -35,30 +42,54 @@ def _trace(cfg, rng, n, max_prompt):
             for _ in range(n)]
 
 
+def _mixed_trace(cfg, rng, n, chunk, max_prompt):
+    """Alternate short (single-chunk) and long (multi-chunk) prompts."""
+    out = []
+    for i in range(n):
+        lo, hi = ((4, chunk) if i % 2 == 0
+                  else (chunk + 1, max_prompt))
+        out.append(rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(lo, hi + 1))))
+    return out
+
+
 def _drain(engine, prompts, max_new):
-    futs = [engine.submit(p, max_new_tokens=max_new) for p in prompts]
+    from repro.serve import Request
+
+    futs = [engine.submit(Request(prompt=p, max_new_tokens=max_new))
+            for p in prompts]
     engine.run_until_idle()
     for f in futs:
         f.result(0)
 
 
-def _run_engine(slots: int, requests: int, max_new: int, seed: int = 0):
+def _run_engine(slots: int, requests: int, max_new: int, seed: int = 0,
+                pool: str = "dense"):
     from repro.configs import registry
     from repro.serve import ServeEngine, loader
 
     cfg = registry.get("smollm-135m-smoke")
     _, params = loader.load_for_serving(cfg, seed=0)
-    engine = ServeEngine(cfg, params, slots=slots, max_len=96, seed=seed)
+    engine = ServeEngine(cfg, params, slots=slots, max_len=96, pool=pool,
+                         seed=seed)
     rng = np.random.default_rng(seed)
-    # burn-in: one request per power-of-two bucket warms every compile,
-    # then the metrics (incl. the tick clock) reset so neither compile
-    # wall-time nor cold-TTFT requests leak into the gated snapshot
+    # burn-in: one request per power-of-two bucket warms every dense
+    # compile (the paged engine needs just one multi-chunk prompt — chunk
+    # prefill + decode + insert/reset cover every trace it will ever
+    # take), then the metrics (incl. the tick clock) reset so neither
+    # compile wall-time nor cold-TTFT requests leak into the gated
+    # snapshot
+    burn = (8,) if pool == "paged" else (8, 16, 32, 48)
     _drain(engine, [rng.integers(0, cfg.vocab_size, size=n)
-                    for n in (8, 16, 32, 48)], 2)
+                    for n in (*burn, 48)], 2)
     warm_compiles = engine.compile_stats["compiles"]
     engine.reset_metrics()
 
-    prompts = _trace(cfg, rng, requests, max_prompt=48)
+    if pool == "paged":
+        prompts = _mixed_trace(cfg, rng, requests,
+                               chunk=engine.prefill_chunk, max_prompt=48)
+    else:
+        prompts = _trace(cfg, rng, requests, max_prompt=48)
     t0 = time.perf_counter()
     _drain(engine, prompts, max_new)
     wall = time.perf_counter() - t0
@@ -68,7 +99,8 @@ def _run_engine(slots: int, requests: int, max_new: int, seed: int = 0):
 
 
 def run(requests: int = 24, max_new: int = 8) -> None:
-    snap, wall = _run_engine(slots=4, requests=requests, max_new=max_new)
+    snap, wall = _run_engine(slots=4, requests=requests, max_new=max_new,
+                             pool="dense")
     tok_s = snap["decode_tok_per_s"]
     common.emit(
         "serve/trace_e2e", wall * 1e6,
@@ -79,9 +111,23 @@ def run(requests: int = 24, max_new: int = 8) -> None:
         f"requests={snap['requests_finished']};"
         f"tokens={snap['total_tokens']}")
 
+    snap, wall = _run_engine(slots=4, requests=requests, max_new=max_new,
+                             pool="paged")
+    tok_s = snap["decode_tok_per_s"]
+    common.emit(
+        "serve/paged_e2e", wall * 1e6,
+        f"us_per_tok={1e6 / tok_s:.1f};tok_s={tok_s:.1f};"
+        f"p50_ttft_ms={snap['ttft_ms']['p50']};"
+        f"p95_ttft_ms={snap['ttft_ms']['p95']};"
+        f"chunk_ticks={snap['chunk_ticks']};"
+        f"pages_hwm={snap['pool']['pages_hwm']};"
+        f"pages_total={snap['pool']['total_pages']};"
+        f"requests={snap['requests_finished']};"
+        f"tokens={snap['total_tokens']}")
+
     if jax.default_backend() == "tpu":
         snap, wall = _run_engine(slots=16, requests=4 * requests,
-                                 max_new=max_new)
+                                 max_new=max_new, pool="paged")
         tok_s = snap["decode_tok_per_s"]
         common.emit("serve/large_pool", 1e6 / tok_s if tok_s else None,
                     f"tok_s={tok_s:.1f};"

@@ -1,10 +1,12 @@
 """Continuous-batching serving demo on :class:`repro.serve.ServeEngine`.
 
 Mixed-length prompts arrive over time through the async client; the engine
-admits them into its decode-slot pool as slots free up (bucketed prefill,
-one compile per power-of-two bucket) and advances every in-flight request
-one token per fused pooled decode tick. Per-request TTFT/TPOT and the
-engine's throughput/occupancy snapshot are printed at the end.
+admits them into its decode-slot pool as slots free up — by default into a
+paged KV cache pool with chunked prefill (one compile for every prompt
+length), falling back to whole-bucket admission for archs the chunk path
+can't serve — and advances every in-flight request one token per fused
+pooled decode tick. Per-request TTFT/TPOT and the engine's
+throughput/occupancy/pages snapshot are printed at the end.
 
 Run: ``PYTHONPATH=src python examples/serve_lm.py --arch smollm-135m-smoke``
 Try ``--arch recurrentgemma-2b-smoke`` (RG-LRU state: the engine switches
@@ -34,7 +36,8 @@ def main():
     args = ap.parse_args()
 
     from repro.configs import registry
-    from repro.serve import SamplingParams, ServeClient, ServeEngine, loader
+    from repro.serve import (Request, SamplingParams, ServeClient,
+                             ServeEngine, loader)
 
     cfg = registry.get(args.arch)
     _, params = loader.load_for_serving(cfg, seed=0)
@@ -70,8 +73,9 @@ def main():
     with ServeClient(engine) as client:
         for plen in lengths:
             prompt = rng.integers(0, cfg.vocab_size, size=int(plen))
-            futs.append(client.submit(prompt, max_new_tokens=args.gen_len,
-                                      extras=extras()))
+            futs.append(client.submit(Request(
+                prompt=prompt, max_new_tokens=args.gen_len,
+                extras=extras())))
             time.sleep(0.01)          # requests trickle in, engine runs
         for fut in futs:
             r = fut.result(timeout=600)
@@ -83,11 +87,14 @@ def main():
 
     snap = engine.metrics.snapshot()
     stats = engine.compile_stats
+    buckets = sorted(k[2] for k in stats["traces"] if k[0] == "prefill")
     print(f"decode: {snap['decode_tok_per_s']:.1f} tok/s  "
           f"occupancy: {snap['slot_occupancy']:.2f}  "
-          f"ticks: {snap['ticks']}  compiles: {stats['compiles']} "
-          f"(prefill buckets: "
-          f"{sorted(k[2] for k in stats['traces'] if k[0] == 'prefill')})")
+          f"ticks: {snap['ticks']}  pool: {snap['pool']['kind']} "
+          f"(pages hwm {snap['pool']['pages_hwm']}/"
+          f"{snap['pool']['total_pages']})  compiles: {stats['compiles']}"
+          + (f" (prefill buckets: {buckets})" if buckets else
+             " (chunked prefill: one compile for all prompt lengths)"))
 
 
 if __name__ == "__main__":

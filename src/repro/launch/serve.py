@@ -35,6 +35,17 @@ def main():
     ap.add_argument("--max-len", type=int, default=128,
                     help="per-slot budget: prompt + generated tokens")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pool", default="paged", choices=("paged", "dense"),
+                    help="cache pool kind (paged falls back to dense for "
+                         "sequential-state archs)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged pool: tokens per page")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="paged pool: physical pages incl. the trash page "
+                         "(0 = dense-equivalent capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunked-prefill chunk size; 0 = whole-bucket "
+                         "admission")
     ap.add_argument("--min-prompt", type=int, default=4)
     ap.add_argument("--max-prompt", type=int, default=48)
     ap.add_argument("--rate", type=float, default=0.0,
@@ -57,7 +68,8 @@ def main():
 
     from repro.configs import registry
     from repro.kernels.context import ExecutionContext
-    from repro.serve import SamplingParams, ServeClient, ServeEngine, loader
+    from repro.serve import (Request, SamplingParams, ServeClient,
+                             ServeEngine, loader)
 
     cfg = registry.get(args.arch)
     context = None
@@ -77,11 +89,15 @@ def main():
     src = f"checkpoint step {step}" if step is not None else "fresh init"
     engine = ServeEngine(
         cfg, params, slots=args.slots, max_len=args.max_len,
+        pool=args.pool, page_size=args.page_size,
+        num_pages=args.num_pages or None,
+        prefill_chunk=args.prefill_chunk or None,
         sampling=SamplingParams(temperature=args.temperature,
                                 top_k=args.top_k, top_p=args.top_p),
         context=context, seed=args.seed)
     print(f"[serve] {cfg.name} | params: {src} | slots={args.slots} "
-          f"max_len={args.max_len} sampling=(T={args.temperature}, "
+          f"max_len={args.max_len} pool={engine.pool.kind} "
+          f"chunk={engine.prefill_chunk} sampling=(T={args.temperature}, "
           f"k={args.top_k}, p={args.top_p})"
           + (f" | mesh={engine.ctx.mesh_layout()}" if engine.mesh else ""))
 
@@ -110,8 +126,9 @@ def main():
     with ServeClient(engine) as client:
         for i, plen in enumerate(lengths):
             prompt = rng.integers(0, cfg.vocab_size, size=int(plen))
-            futs.append(client.submit(prompt, max_new_tokens=args.max_new,
-                                      extras=extras()))
+            futs.append(client.submit(Request(
+                prompt=prompt, max_new_tokens=args.max_new,
+                extras=extras())))
             if args.rate > 0 and i + 1 < args.requests:
                 time.sleep(rng.exponential(1.0 / args.rate))
         for fut in futs:
@@ -128,6 +145,8 @@ def main():
           f"{snap['decode_tok_per_s']:.1f} tok/s | occupancy "
           f"{snap['slot_occupancy']:.2f} | ttft p50/p95 "
           f"{snap['ttft_ms']['p50']:.1f}/{snap['ttft_ms']['p95']:.1f} ms | "
+          f"pool={snap['pool']['kind']} pages_hwm="
+          f"{snap['pool']['pages_hwm']}/{snap['pool']['total_pages']} | "
           f"compiles={engine.compile_stats['compiles']}")
     if args.metrics_json:
         with open(args.metrics_json, "w") as f:

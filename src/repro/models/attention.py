@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import paged_attention as pa
 from repro.models import common as cm
 from repro.runtime.pytree import ParamSpec
 from repro.runtime.sharding import constrain
@@ -192,7 +193,8 @@ def attention(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
               kv_x: Optional[jnp.ndarray] = None,
               is_cross: bool = False,
               causal: bool = True,
-              use_rope: bool = True
+              use_rope: bool = True,
+              page_table: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Unified attention entry.
 
@@ -200,6 +202,13 @@ def attention(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
     reads+writes cache at ``cur_pos``). ``kv_x`` switches to cross-attention
     (keys/values from the encoder stream; cache holds the projected enc KV).
     window > 0 = sliding-window; ring-buffer cache of size ``window``.
+
+    ``page_table`` (B, P) int32 switches decode to the **paged** cache
+    layout: ``cache`` leaves are one physical pool (num_pages, page_size,
+    KV, D) shared by all rows, row ``b``'s logical page ``j`` lives at
+    physical page ``page_table[b, j]``, and Sq may exceed 1 (chunked
+    prefill runs prompt chunks through this same path). Sliding-window and
+    cross caches stay dense even when a page table is supplied.
     """
     B, Sq, E = x.shape
     H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
@@ -230,6 +239,32 @@ def attention(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
         k = cm.rope(k, positions, cfg.rope_theta)
     k = constrain(k, kv_layout(cfg, mode))
     v = constrain(v, kv_layout(cfg, mode))
+
+    if mode == "decode" and not cross and page_table is not None \
+            and window == 0:
+        # paged pool: scatter this step's KV into the rows' pages, read
+        # back through the page-table gather. ``positions`` (B, Sq) are the
+        # tokens' absolute positions (Sq > 1 = a prefill chunk). Positions
+        # past the table's reach — chunk pad tails — are redirected to the
+        # trash page (physical page 0, never allocated), so a clamped
+        # take_along_axis can never clobber a live page.
+        ps_ = cache["k"].shape[1]
+        logical = positions // ps_
+        P = page_table.shape[1]
+        pages = jnp.take_along_axis(page_table,
+                                    jnp.minimum(logical, P - 1), axis=1)
+        pages = jnp.where(logical < P, pages, pa.TRASH_PAGE)
+        offs = positions % ps_
+        k_all = cache["k"].at[pages, offs].set(k.astype(cache["k"].dtype))
+        v_all = cache["v"].at[pages, offs].set(v.astype(cache["v"].dtype))
+        new_cache = {"k": k_all, "v": v_all}
+        if Sq == 1:
+            att = pa.paged_decode_attention(
+                q[:, 0], k_all, v_all, page_table, positions[:, 0])[:, None]
+        else:
+            att = pa.paged_attend_ref(q, k_all, v_all, page_table,
+                                      positions)
+        return _proj_out(cfg, params, att), new_cache
 
     if mode == "decode" and not cross:
         # write this step's KV into the cache (ring buffer if windowed).

@@ -72,49 +72,31 @@ def layer_specs(cfg: ModelConfig, btype: str) -> Dict:
     return out
 
 
+def _cache_lib():
+    """The cache layouts live in :mod:`repro.serve.cache` (one interface
+    for dense and paged pools); imported lazily because ``repro.serve``'s
+    package init imports the engine, which imports this module."""
+    from repro.serve import cache as cache_lib
+    return cache_lib
+
+
 def layer_cache_spec(cfg: ModelConfig, btype: str, batch: int,
                      seq_len: int) -> Optional[Dict]:
-    if btype in ("attn", "global", "moe"):
-        return {"self": attn.cache_spec(cfg, batch, seq_len)}
-    if btype == "local":
-        length = min(cfg.sliding_window, seq_len)
-        return {"self": attn.cache_spec(cfg, batch, length)}
-    if btype == "rec":
-        return {"rec": rgm.rglru_cache_spec(cfg, batch)}
-    if btype == "mlstm":
-        return {"mlstm": xm.mlstm_cache_spec(cfg, batch)}
-    if btype == "slstm":
-        return {"slstm": xm.slstm_cache_spec(cfg, batch)}
-    if btype == "xdec":
-        return {"self": attn.cache_spec(cfg, batch, seq_len),
-                "cross": attn.cache_spec(cfg, batch, cfg.enc_seq)}
-    if btype == "enc":
-        return None
-    raise ValueError(btype)
+    """Thin delegate — see :func:`repro.serve.cache.layer_cache_spec`."""
+    return _cache_lib().layer_cache_spec(cfg, btype, batch, seq_len)
 
 
 def init_layer_cache(cfg: ModelConfig, btype: str, batch: int,
                      seq_len: int) -> Optional[Dict]:
-    spec = layer_cache_spec(cfg, btype, batch, seq_len)
-    if spec is None:
-        return None
-    cache = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
-                                   spec)
-    if btype == "mlstm":
-        cache["mlstm"]["m"] = jnp.full(spec["mlstm"]["m"].shape, -1e30,
-                                       jnp.float32)
-    if btype == "slstm":
-        cache["slstm"]["m"] = jnp.full(spec["slstm"]["m"].shape, -1e30,
-                                       jnp.float32)
-        cache["slstm"]["n"] = jnp.full(spec["slstm"]["n"].shape, 1e-6,
-                                       jnp.float32)
-    return cache
+    """Thin delegate — see :func:`repro.serve.cache.init_layer_cache`."""
+    return _cache_lib().init_layer_cache(cfg, btype, batch, seq_len)
 
 
 def layer_apply(cfg: ModelConfig, btype: str, params: Dict, x: jnp.ndarray,
                 *, positions: jnp.ndarray, mode: str,
                 cache: Optional[Dict], cur_pos,
-                enc_out: Optional[jnp.ndarray]
+                enc_out: Optional[jnp.ndarray],
+                page_table: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -132,7 +114,8 @@ def layer_apply(cfg: ModelConfig, btype: str, params: Dict, x: jnp.ndarray,
         a, c_new = attn.attention(
             cfg, params["attn"], h, positions=positions, mode=mode,
             cache=None if cache is None else cache.get("self"),
-            cur_pos=cur_pos, window=window, causal=(btype != "enc"))
+            cur_pos=cur_pos, window=window, causal=(btype != "enc"),
+            page_table=page_table)
         x = res_add(x, a)
         if new_cache is not None and c_new is not None:
             new_cache["self"] = c_new
@@ -173,7 +156,7 @@ def layer_apply(cfg: ModelConfig, btype: str, params: Dict, x: jnp.ndarray,
         a, c_new = attn.attention(
             cfg, params["attn"], h, positions=positions, mode=mode,
             cache=None if cache is None else cache.get("self"),
-            cur_pos=cur_pos, window=0)
+            cur_pos=cur_pos, window=0, page_table=page_table)
         x = res_add(x, a)
         if new_cache is not None and c_new is not None:
             new_cache["self"] = c_new
@@ -234,43 +217,20 @@ def total_seq(cfg: ModelConfig, seq_len: int) -> int:
 
 
 def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
-    unit = cfg.block_unit
-    R = cfg.unit_repeats
-    seq_len = total_seq(cfg, seq_len)
-
-    def stack(tree):
-        return jax.tree_util.tree_map(
-            lambda s: jax.ShapeDtypeStruct((R,) + s.shape, s.dtype), tree)
-
-    return {
-        "unit": [stack(layer_cache_spec(cfg, t, batch, seq_len))
-                 for t in unit],
-        "tail": [layer_cache_spec(cfg, t, batch, seq_len)
-                 for t in cfg.tail_layers],
-    }
+    """Thin delegate — see :func:`repro.serve.cache.cache_specs`."""
+    return _cache_lib().cache_specs(cfg, batch, seq_len)
 
 
 def init_caches(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
-    unit = cfg.block_unit
-    R = cfg.unit_repeats
-    seq_len = total_seq(cfg, seq_len)
-
-    def stack(tree):
-        return jax.tree_util.tree_map(
-            lambda a: jnp.broadcast_to(a, (R,) + a.shape).copy(), tree)
-
-    return {
-        "unit": [stack(init_layer_cache(cfg, t, batch, seq_len))
-                 for t in unit],
-        "tail": [init_layer_cache(cfg, t, batch, seq_len)
-                 for t in cfg.tail_layers],
-    }
+    """Thin delegate — see :func:`repro.serve.cache.init_caches`."""
+    return _cache_lib().init_caches(cfg, batch, seq_len)
 
 
 def backbone(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
              positions: jnp.ndarray, mode: str,
              caches: Optional[Dict] = None, cur_pos=None,
-             enc_out: Optional[jnp.ndarray] = None
+             enc_out: Optional[jnp.ndarray] = None,
+             page_table: Optional[jnp.ndarray] = None
              ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     """Run the full layer stack. Returns (x, new_caches, aux)."""
     unit = cfg.block_unit
@@ -299,7 +259,7 @@ def backbone(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
             x, nc, a = layer_apply(cfg, t, layer_params[i], x,
                                    positions=positions, mode=mode,
                                    cache=layer_caches[i], cur_pos=cur_pos,
-                                   enc_out=enc_out)
+                                   enc_out=enc_out, page_table=page_table)
             new_caches.append(nc if nc is not None else layer_caches[i])
             aux = aux + a
         if with_cache:
@@ -330,7 +290,8 @@ def backbone(cfg: ModelConfig, params: Dict, x: jnp.ndarray, *,
         c = caches["tail"][i] if with_cache else None
         x, nc, a = layer_apply(cfg, t, params["tail"][i], x,
                                positions=positions, mode=mode, cache=c,
-                               cur_pos=cur_pos, enc_out=enc_out)
+                               cur_pos=cur_pos, enc_out=enc_out,
+                               page_table=page_table)
         tail_caches.append(nc if nc is not None else c)
         aux = aux + a
 
@@ -476,20 +437,11 @@ def write_cache_slot(cfg: ModelConfig, pool: Dict, sub: Dict,
 
     ``pool`` and ``sub`` must come from :func:`init_caches` (or a prefill
     thereof) with the same ``seq_len``; only the batch extent differs.
-    Unit-stack leaves carry batch at axis 1 (axis 0 is the scan repeat),
-    tail leaves at axis 0 — the same layout the chunked prefill scan in
-    :mod:`repro.train.steps` slices.
+    Thin delegate — see :func:`repro.serve.cache.write_cache_slot` (the
+    paged-pool equivalent is :meth:`repro.serve.cache.PagedCachePool.
+    write_slot`).
     """
-    def upd(axis):
-        def f(p, s):
-            return jax.lax.dynamic_update_slice_in_dim(
-                p, s.astype(p.dtype), slot, axis)
-        return f
-
-    return {
-        "unit": jax.tree_util.tree_map(upd(1), pool["unit"], sub["unit"]),
-        "tail": jax.tree_util.tree_map(upd(0), pool["tail"], sub["tail"]),
-    }
+    return _cache_lib().write_cache_slot(cfg, pool, sub, slot)
 
 
 def reset_cache_slot(cfg: ModelConfig, pool: Dict, slot: jnp.ndarray,
@@ -502,19 +454,23 @@ def reset_cache_slot(cfg: ModelConfig, pool: Dict, slot: jnp.ndarray,
     the whole slot via :func:`write_cache_slot` — but scrubbing keeps a
     long-lived engine's pool free of dead request state (and of any
     stale-read bug class a future cache layout change might introduce).
+    Thin delegate — see :func:`repro.serve.cache.reset_cache_slot`.
     """
-    return write_cache_slot(cfg, pool, init_caches(cfg, 1, seq_len), slot)
+    return _cache_lib().reset_cache_slot(cfg, pool, slot, seq_len)
 
 
 def decode_step(cfg: ModelConfig, params: Dict, token: jnp.ndarray,
-                caches: Dict, cur_pos: jnp.ndarray
+                caches: Dict, cur_pos: jnp.ndarray,
+                page_table: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Dict]:
     """One decode step: token (B,) int32 at absolute position ``cur_pos``.
 
     ``cur_pos`` is a scalar (the whole batch decodes in lockstep) or a
     ``(B,)`` vector — the serving engine's slot pool, where every request
     sits at its own absolute position and the KV write/read masks are
-    per-slot (see :mod:`repro.serve.engine`).
+    per-slot (see :mod:`repro.serve.engine`). With ``page_table`` (B, P)
+    the full-attention caches are read/written through the paged pool
+    layout instead (see :class:`repro.serve.cache.PagedCachePool`).
     """
     x = cm.embed(cfg, params["embed"], token[:, None])
     B = x.shape[0]
@@ -524,7 +480,41 @@ def decode_step(cfg: ModelConfig, params: Dict, token: jnp.ndarray,
     else:
         positions = cur_pos[:, None]
     x, caches, _ = backbone(cfg, params, x, positions=positions,
-                            mode="decode", caches=caches, cur_pos=cur_pos)
+                            mode="decode", caches=caches, cur_pos=cur_pos,
+                            page_table=page_table)
     x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = cm.head_apply(cfg, params["head"], params["embed"], x)
+    return logits[:, 0], caches
+
+
+def prefill_chunk(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                  caches: Dict, start_pos: jnp.ndarray,
+                  last_idx: jnp.ndarray, page_table: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """Process one fixed-size prompt chunk through the paged decode path.
+
+    ``tokens`` (B, C) are C consecutive prompt tokens per row, right-padded
+    on the final chunk; ``start_pos`` (B,) is the absolute position of each
+    row's first chunk token, ``last_idx`` (B,) the within-chunk index of
+    the last *real* token (its logits are the readout — only meaningful on
+    a prompt's final chunk). One compile serves every prompt length: a
+    prompt is ``ceil(len/C)`` invocations of this function instead of one
+    per-bucket prefill compile. Requires :func:`repro.serve.cache.
+    chunked_prefill_supported` (full-attention archs, no frontend/encoder/
+    window blocks); causality makes each chunk's KV independent of the pad
+    tail, and pad-position writes land in reserved-but-unread page slots
+    (overwritten by decode before their positions become valid) or the
+    trash page — the same inertness argument as bucketed
+    :func:`prefill_at`.
+    """
+    x = cm.embed(cfg, params["embed"], tokens)
+    B, C, _ = x.shape
+    start_pos = jnp.asarray(start_pos, jnp.int32)
+    positions = start_pos[:, None] + jnp.arange(C)[None, :]
+    x, caches, _ = backbone(cfg, params, x, positions=positions,
+                            mode="decode", caches=caches, cur_pos=None,
+                            page_table=page_table)
+    x_last = x[jnp.arange(B), jnp.asarray(last_idx, jnp.int32)][:, None]
+    x_last = cm.rmsnorm(x_last, params["final_norm"], cfg.norm_eps)
+    logits = cm.head_apply(cfg, params["head"], params["embed"], x_last)
     return logits[:, 0], caches

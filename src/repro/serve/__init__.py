@@ -1,20 +1,26 @@
 """``repro.serve`` — continuous-batching inference for the butterfly LMs.
 
-    from repro.serve import ServeEngine, ServeClient, SamplingParams, loader
+    from repro.serve import Request, ServeEngine, ServeClient, loader
 
     cfg = registry.get("smollm-135m-smoke")
     step, params = loader.load_for_serving(cfg, checkpoint_dir)
-    engine = ServeEngine(cfg, params, slots=4, max_len=128)
+    engine = ServeEngine(cfg, params, slots=4, max_len=128)  # paged pool
     with ServeClient(engine) as client:
-        fut = client.submit([1, 2, 3], max_new_tokens=16)
+        fut = client.submit(Request(prompt=[1, 2, 3], max_new_tokens=16))
         print(fut.result().tokens)
 
-See :mod:`repro.serve.engine` for the tick-loop / bucketing / compile-cache
-design, and ``python -m repro.launch.serve --help`` for the workload-replay
+The engine serves over a :class:`CachePool` — paged by default
+(``pool="paged"``: fixed-size pages, per-slot page tables, free-list
+recycling, chunked prefill), with the dense PR-5 layout available as
+``pool="dense"`` for bisection. See :mod:`repro.serve.engine` for the
+tick-loop / compile-cache design, :mod:`repro.serve.cache` for the pool
+API, and ``python -m repro.launch.serve --help`` for the workload-replay
 CLI.
 """
 
-from repro.serve import loader, metrics, sampling
+from repro.serve import cache, loader, metrics, sampling
+from repro.serve.cache import (CachePool, DenseCachePool, PagedCachePool,
+                               PoolExhausted, make_pool)
 from repro.serve.client import ServeClient
 from repro.serve.engine import (CompileCache, GenerationResult, Request,
                                 ServeEngine)
@@ -22,8 +28,17 @@ from repro.serve.metrics import EngineMetrics, RequestMetrics
 from repro.serve.sampling import GREEDY, SamplingParams, sample_logits
 
 __all__ = [
-    "ServeEngine", "ServeClient", "CompileCache", "Request",
-    "GenerationResult", "EngineMetrics", "RequestMetrics",
+    # engine + client
+    "ServeEngine", "ServeClient", "CompileCache",
+    # request/result surface
+    "Request", "GenerationResult",
+    # cache pools
+    "CachePool", "DenseCachePool", "PagedCachePool", "PoolExhausted",
+    "make_pool",
+    # metrics
+    "EngineMetrics", "RequestMetrics",
+    # sampling
     "SamplingParams", "GREEDY", "sample_logits",
-    "loader", "metrics", "sampling",
+    # submodules
+    "cache", "loader", "metrics", "sampling",
 ]

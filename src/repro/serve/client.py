@@ -9,7 +9,8 @@ completion (not submission) order, which is the whole point of continuous
 batching.
 
     with ServeClient(engine) as client:
-        futs = [client.submit(p, max_new_tokens=16) for p in prompts]
+        futs = [client.submit(Request(prompt=p, max_new_tokens=16))
+                for p in prompts]
         results = [f.result(timeout=60) for f in futs]
 """
 
@@ -17,9 +18,8 @@ from __future__ import annotations
 
 import threading
 from concurrent.futures import Future
-from typing import Dict, Optional, Sequence
 
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import Request, ServeEngine
 
 
 class ServeClient:
@@ -40,14 +40,15 @@ class ServeClient:
 
     # -- public --------------------------------------------------------
 
-    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16, *,
-               stop_token: Optional[int] = None,
-               extras: Optional[Dict] = None) -> Future:
+    def submit(self, request: Request, *legacy_args, **legacy_kwargs
+               ) -> Future:
+        """Queue a :class:`repro.serve.Request`; the engine raises a
+        migration ``TypeError`` for the removed positional form."""
         with self._lock:
             if self._stop.is_set():
                 raise RuntimeError("client is closed")
-            fut = self.engine.submit(prompt, max_new_tokens,
-                                     stop_token=stop_token, extras=extras)
+            fut = self.engine.submit(request, *legacy_args,
+                                     **legacy_kwargs)
         self._wake.set()
         return fut
 

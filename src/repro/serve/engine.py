@@ -1,27 +1,47 @@
 """Continuous-batching inference engine for the butterfly LMs.
 
 The engine owns a fixed pool of ``slots`` decode lanes over ONE pooled
-cache tree (batch axis = slot index) and runs a strict tick loop:
+cache tree — a :class:`repro.serve.cache.CachePool`, paged by default
+(``pool="paged"``, dense rows via ``pool="dense"`` for bisection; archs
+with sequential-state blocks fall back to dense automatically) — and runs
+a strict tick loop:
 
-  1. **Admit** — while a slot is free and requests are queued, pop one,
-     right-pad its prompt to a power-of-two bucket and prefill it at batch 1
-     (:func:`repro.train.steps.make_bucket_prefill_step`); the prefilled
-     cache row is spliced into the pool at the slot index
-     (:func:`repro.models.lm.write_cache_slot`) and the first token is
-     sampled straight off the prefill logits — TTFT never waits for the
-     co-batched decode.
-  2. **Decode** — ONE fused pooled step
-     (:func:`repro.train.steps.make_pool_serve_step`) advances every active
-     slot by one token: per-slot positions, per-slot KV masks, per-slot
-     active masks. Finished slots (stop token or length budget) resolve
-     their futures and free immediately; the next tick's admission refills
-     them while the in-flight requests keep decoding — no stall, no
-     re-batching barrier.
+  1. **Admit** — while a slot is free and requests are queued, pop one and
+     *reserve its full token budget* in the cache pool
+     (``alloc_pages(slot, n_front + prompt + max_new)``). A paged pool
+     that cannot cover the reservation raises
+     :class:`~repro.serve.cache.PoolExhausted`; the engine leaves the
+     request queued and retries after finished requests free pages —
+     exhaustion is backpressure, never a crash. Eager whole-budget
+     reservation keeps admission deadlock-free with no preemption path;
+     the capacity win over dense comes from reserving the *request's*
+     budget instead of a worst-case ``max_len`` row.
+  2. **Chunked prefill** (paged, full-attention archs) — admitted prompts
+     are processed as fixed-size chunks (``prefill_chunk`` tokens) through
+     ONE compiled pool-wide step (:func:`repro.train.steps.
+     make_chunk_prefill_step`), interleaved with decode ticks, so a long
+     prompt never stalls in-flight decodes and every prompt length shares
+     a single compile. Archs the chunk path can't serve (vision frontend,
+     encoders, sliding-window or cross-attention caches) admit through the
+     PR-5 whole-bucket prefill instead, scattered into the pool via
+     :meth:`CachePool.write_slot`.
+  3. **Decode** — ONE fused pooled step (:func:`repro.train.steps.
+     make_pool_serve_step`) advances every decoding slot by one token:
+     per-slot positions, per-slot page tables (inactive lanes redirected
+     to the trash page), per-slot active masks. Finished slots resolve
+     their futures, free their pages for recycling, and the next tick's
+     admission refills them — no stall, no re-batching barrier.
+
+Requests are frozen :class:`Request` values — ``submit()`` takes exactly
+one of them; the pre-paging positional ``submit(prompt, max_new_tokens=…)``
+shape raises ``TypeError`` with the migration spelled out (repo policy
+post-PR 5: renamed surfaces break loudly, no loose-kwarg shims).
 
 Compilation is explicit: every jitted function lives in a
-:class:`CompileCache` keyed on ``(kind, arch, bucket/batch, sampling,
-ExecutionContext)``, with a trace counter the tests gate on — admitting ten
-prompts that share a bucket compiles the prefill exactly once.
+:class:`CompileCache` keyed on ``(kind, arch, shape/bucket, pool kind,
+sampling, ExecutionContext)``, with a trace counter the tests gate on —
+chunked admission traces ONE prefill for every prompt length; bucketed
+admission traces once per bucket.
 
 The engine is ExecutionContext-native: it resolves ONE context at
 construction (explicit ``context=`` > ambient > the arch's
@@ -45,7 +65,8 @@ import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -53,9 +74,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels import context as exctx
-from repro.models import lm
 from repro.runtime import sharding as rsh
+from repro.serve import cache as cache_lib
 from repro.serve import sampling as sampling_lib
+from repro.serve.cache import PoolExhausted
 from repro.serve.metrics import EngineMetrics
 from repro.train import steps as steps_lib
 
@@ -73,7 +95,7 @@ class CompileCache:
     :meth:`counted_jit` wraps the pre-jit function so every retrace bumps
     ``traces[key]`` (the function body only executes while jax traces —
     cached executions never touch it). The serving tests gate on exactly
-    this counter: one trace per (bucket, context), ever.
+    this counter: one trace per (shape, context), ever.
     """
 
     def __init__(self):
@@ -100,16 +122,43 @@ class CompileCache:
         return list(self._fns)
 
 
-@dataclass
-class Request:
-    """One queued generation request."""
+_SUBMIT_MIGRATION = (
+    "takes a single repro.serve.Request — the positional "
+    "submit(prompt, max_new_tokens=..., stop_token=..., extras=...) form "
+    "was removed. Migrate:\n"
+    "    submit(Request(prompt=prompt, max_new_tokens=16,\n"
+    "                   stop_token=None, extras=None))")
 
-    rid: int
-    prompt: np.ndarray                     # (prompt_len,) int32
-    max_new_tokens: int
+
+@dataclass(frozen=True, eq=False)
+class Request:
+    """One generation request — the frozen value ``submit()`` takes.
+
+    ``prompt`` is normalized to a tuple of ints at construction (any int
+    sequence/array is accepted). ``sampling=None`` means the engine-wide
+    policy; a non-None value must equal it — the pooled decode step bakes
+    sampling in at trace time, so heterogeneous per-request sampling is
+    rejected loudly rather than silently ignored. ``rid=None`` lets the
+    engine assign its sequence number; an explicit rid must be unique
+    among live requests.
+    """
+
+    prompt: Tuple[int, ...]
+    max_new_tokens: int = 16
+    sampling: Optional[sampling_lib.SamplingParams] = None
     stop_token: Optional[int] = None
-    extras: Optional[Dict] = None          # frontend_embeds / frames
-    future: Future = field(default_factory=Future)
+    extras: Optional[Mapping] = None       # frontend_embeds / frames
+    rid: Optional[int] = None
+
+    def __post_init__(self):
+        prompt = tuple(int(t) for t in
+                       np.asarray(self.prompt, np.int32).reshape(-1))
+        object.__setattr__(self, "prompt", prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{self.max_new_tokens}")
 
 
 @dataclass
@@ -127,9 +176,22 @@ class _Slot:
     """Host-side state of one occupied decode lane."""
 
     req: Request
-    tokens: List[int]                      # generated so far (>= 1)
-    cur_pos: int                           # absolute cache write position
-    last_token: int
+    rid: int
+    future: Future
+    prompt: np.ndarray
+    tokens: List[int] = field(default_factory=list)
+    cur_pos: int = 0                       # absolute cache write position
+    last_token: int = -1
+    prefilled: int = -1                    # prompt tokens chunk-prefilled
+    #                                        so far; -1 = not in chunk phase
+
+    @property
+    def prefilling(self) -> bool:
+        return 0 <= self.prefilled < self.prompt.size
+
+    @property
+    def decoding(self) -> bool:
+        return not self.prefilling
 
 
 class ServeEngine:
@@ -137,19 +199,27 @@ class ServeEngine:
 
     * ``slots`` — decode lanes (the pooled batch size of the serve step).
     * ``max_len`` — per-slot token budget: every request must satisfy
-      ``prompt_len + max_new_tokens <= max_len`` (the pooled caches are
-      allocated once at this length).
+      ``prompt_len + max_new_tokens <= max_len``.
+    * ``pool`` — cache pool kind: ``"paged"`` (default; falls back to
+      dense for sequential-state archs) or ``"dense"`` (the PR-5 layout,
+      kept for bisection). See :mod:`repro.serve.cache`.
+    * ``page_size`` / ``num_pages`` — paged-pool geometry; ``num_pages``
+      defaults to dense-equivalent capacity plus the trash page.
+    * ``prefill_chunk`` — chunked-prefill chunk size (paged, full-attention
+      archs only; ``None``/0 disables chunking and admits through the
+      whole-bucket path even on a paged pool).
     * ``sampling`` — engine-wide :class:`SamplingParams` (a trace-time
       constant of the serve step; greedy by default).
     * ``context`` — execution policy; resolved once here, exactly like the
       ``Trainer`` (explicit > ambient > ``cfg.butterfly`` > env/platform).
-    * ``scrub_freed_slots`` — re-init a slot's cache row when its request
-      finishes (:func:`repro.models.lm.reset_cache_slot`); off by default
-      since admission overwrites the full row anyway.
+    * ``scrub_freed_slots`` — re-init a slot's cache state when its request
+      finishes; off by default since admission overwrites it anyway.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 128,
+                 max_len: int = 128, pool: str = "paged",
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = 16,
                  sampling: sampling_lib.SamplingParams = sampling_lib.GREEDY,
                  context: exctx.ContextLike = None, seed: int = 0,
                  min_bucket: int = 8, scrub_freed_slots: bool = False):
@@ -171,16 +241,28 @@ class ServeEngine:
                          else 0)
         types = set(cfg.block_unit) | set(cfg.tail_layers)
         self._exact_buckets = bool(types & set(SEQUENTIAL_STATE_BLOCKS))
-        self._caches = lm.init_caches(cfg, slots, self.max_len)
+        self.pool = cache_lib.make_pool(cfg, slots, self.max_len,
+                                        kind=pool, page_size=page_size,
+                                        num_pages=num_pages)
+        self.prefill_chunk = (
+            int(prefill_chunk)
+            if (prefill_chunk and self.pool.kind == "paged"
+                and cache_lib.chunked_prefill_supported(cfg)) else None)
+        self._caches = self.pool.init()
         self._slots: List[Optional[_Slot]] = [None] * slots
         self._queue: collections.deque = collections.deque()
         self._lock = threading.Lock()
         self._next_rid = 0
         self._key = jax.random.PRNGKey(seed)
         self.compile_cache = CompileCache()
-        self.metrics = EngineMetrics(slots=slots)
+        self.metrics = self._fresh_metrics()
         self._sample_fn = functools.partial(sampling_lib.sample_logits,
                                             params=sampling)
+
+    def _fresh_metrics(self, history: int = 1024) -> EngineMetrics:
+        return EngineMetrics(slots=self.slots, max_request_history=history,
+                             pool_kind=self.pool.kind,
+                             total_pages=self.pool.total_pages)
 
     # -- execution scope ----------------------------------------------
 
@@ -214,31 +296,61 @@ class ServeEngine:
                 key, steps_lib.make_bucket_prefill_step(self.cfg,
                                                         self.max_len))))
 
+    def _chunk_fn(self) -> Callable:
+        key = ("chunk_prefill", self.cfg.name, self.slots,
+               self.prefill_chunk, self.ctx)
+        return self.compile_cache.get(key, lambda: (
+            self.compile_cache.counted_jit(
+                key, steps_lib.make_chunk_prefill_step(self.cfg),
+                donate_argnums=(2,))))
+
     def _decode_fn(self) -> Callable:
-        key = ("decode", self.cfg.name, self.slots, self.sampling, self.ctx)
+        key = ("decode", self.cfg.name, self.slots, self.pool.kind,
+               self.sampling, self.ctx)
         return self.compile_cache.get(key, lambda: (
             self.compile_cache.counted_jit(
                 key,
-                steps_lib.make_pool_serve_step(self.cfg, self._sample_fn),
+                steps_lib.make_pool_serve_step(
+                    self.cfg, self._sample_fn,
+                    paged=(self.pool.kind == "paged")),
                 donate_argnums=(2,))))
 
     def _insert_fn(self) -> Callable:
-        key = ("insert", self.cfg.name, self.slots, self.ctx)
-        return self.compile_cache.get(key, lambda: (
-            self.compile_cache.counted_jit(
-                key,
-                lambda pool, sub, slot: lm.write_cache_slot(
-                    self.cfg, pool, sub, slot),
-                donate_argnums=(0,))))
+        key = ("insert", self.cfg.name, self.slots, self.pool.kind,
+               self.ctx)
+        if self.pool.kind == "paged":
+            def build():
+                return self.compile_cache.counted_jit(
+                    key,
+                    lambda caches, sub, slot, page_row:
+                        self.pool.write_slot(caches, sub, slot, page_row),
+                    donate_argnums=(0,))
+        else:
+            def build():
+                return self.compile_cache.counted_jit(
+                    key,
+                    lambda caches, sub, slot:
+                        self.pool.write_slot(caches, sub, slot),
+                    donate_argnums=(0,))
+        return self.compile_cache.get(key, build)
 
     def _reset_fn(self) -> Callable:
-        key = ("reset", self.cfg.name, self.slots, self.ctx)
-        return self.compile_cache.get(key, lambda: (
-            self.compile_cache.counted_jit(
-                key,
-                lambda pool, slot: lm.reset_cache_slot(
-                    self.cfg, pool, slot, self.max_len),
-                donate_argnums=(0,))))
+        key = ("reset", self.cfg.name, self.slots, self.pool.kind,
+               self.ctx)
+        if self.pool.kind == "paged":
+            def build():
+                return self.compile_cache.counted_jit(
+                    key,
+                    lambda caches, slot, page_row:
+                        self.pool.reset_slot(caches, slot, page_row),
+                    donate_argnums=(0,))
+        else:
+            def build():
+                return self.compile_cache.counted_jit(
+                    key,
+                    lambda caches, slot: self.pool.reset_slot(caches, slot),
+                    donate_argnums=(0,))
+        return self.compile_cache.get(key, build)
 
     def _first_token_fn(self) -> Callable:
         key = ("sample", self.cfg.name, self.sampling, self.ctx)
@@ -247,31 +359,47 @@ class ServeEngine:
 
     # -- client surface ------------------------------------------------
 
-    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16, *,
-               stop_token: Optional[int] = None,
-               extras: Optional[Dict] = None) -> Future:
-        """Queue a request; returns a future resolving to a
+    def submit(self, request: Request, *legacy_args, **legacy_kwargs
+               ) -> Future:
+        """Queue a :class:`Request`; returns a future resolving to a
         :class:`GenerationResult`. Thread-safe."""
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if prompt.size < 1:
-            raise ValueError("empty prompt")
-        if max_new_tokens < 1:
-            raise ValueError(f"max_new_tokens must be >= 1, got "
-                             f"{max_new_tokens}")
-        if prompt.size + max_new_tokens > self.max_len:
+        if not isinstance(request, Request) or legacy_args or legacy_kwargs:
+            raise TypeError(f"ServeEngine.submit() {_SUBMIT_MIGRATION}")
+        plen = len(request.prompt)
+        if plen + request.max_new_tokens > self.max_len:
             raise ValueError(
-                f"prompt_len {prompt.size} + max_new_tokens "
-                f"{max_new_tokens} exceeds the engine's per-slot budget "
-                f"max_len={self.max_len}")
+                f"prompt_len {plen} + max_new_tokens "
+                f"{request.max_new_tokens} exceeds the engine's per-slot "
+                f"budget max_len={self.max_len}")
+        if (request.sampling is not None
+                and request.sampling != self.sampling):
+            raise ValueError(
+                "per-request sampling must match the engine-wide policy "
+                f"(engine: {self.sampling}, request: {request.sampling}) — "
+                "sampling is a trace-time constant of the pooled decode "
+                "step; run a second engine for a different policy")
+        if isinstance(self.pool, cache_lib.PagedCachePool):
+            need = self.pool.pages_for(
+                self._n_front + plen + request.max_new_tokens)
+            usable = self.pool.total_pages - 1
+            if need > usable:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{usable} usable pages — it could never be admitted "
+                    f"(raise num_pages or lower the request budget)")
         with self._lock:
-            rid = self._next_rid
-            self._next_rid += 1
-            req = Request(rid=rid, prompt=prompt,
-                          max_new_tokens=int(max_new_tokens),
-                          stop_token=stop_token, extras=extras)
-            self.metrics.on_submit(rid, prompt.size)
-            self._queue.append(req)
-        return req.future
+            if request.rid is None:
+                rid = self._next_rid
+            else:
+                rid = int(request.rid)
+                if rid in self.metrics.requests:
+                    raise ValueError(f"rid {rid} is already in flight")
+            self._next_rid = max(self._next_rid, rid) + 1
+            slot = _Slot(req=request, rid=rid, future=Future(),
+                         prompt=np.asarray(request.prompt, np.int32))
+            self.metrics.on_submit(rid, slot.prompt.size)
+            self._queue.append(slot)
+        return slot.future
 
     def has_work(self) -> bool:
         with self._lock:
@@ -284,8 +412,8 @@ class ServeEngine:
         The crash path: when a tick raises (bad extras, an arch the pool
         can't serve, a device error), whoever drives the loop calls this so
         every outstanding future resolves with the real error instead of
-        hanging until its timeout. The pool is left empty; the engine
-        itself stays usable for new submissions.
+        hanging until its timeout. The pool is left empty (pages freed for
+        recycling); the engine itself stays usable for new submissions.
         """
         with self._lock:
             dead = list(self._queue)
@@ -293,14 +421,16 @@ class ServeEngine:
         for i, s in enumerate(self._slots):
             if s is not None:
                 self._slots[i] = None
-                dead.append(s.req)
-        for req in dead:
-            self.metrics.requests.pop(req.rid, None)
-            if not req.future.done():
-                req.future.set_exception(exc)
+                self.pool.free(i)
+                dead.append(s)
+        self.metrics.sync_pool(self.pool)
+        for s in dead:
+            self.metrics.requests.pop(s.rid, None)
+            if not s.future.done():
+                s.future.set_exception(exc)
 
     def active_requests(self) -> List[int]:
-        return [s.req.rid for s in self._slots if s is not None]
+        return [s.rid for s in self._slots if s is not None]
 
     @property
     def compile_stats(self) -> Dict:
@@ -314,17 +444,22 @@ class ServeEngine:
         is in flight (in-flight RequestMetrics would be orphaned)."""
         if self.has_work():
             raise RuntimeError("reset_metrics with requests in flight")
-        self.metrics = EngineMetrics(
-            slots=self.slots,
-            max_request_history=self.metrics.max_request_history)
+        self.metrics = self._fresh_metrics(
+            history=self.metrics.max_request_history)
+        self.metrics.sync_pool(self.pool)
 
     # -- the tick loop -------------------------------------------------
 
     def step(self) -> int:
-        """One engine tick: admit into free slots, then one pooled decode.
-        Returns the number of slots still active after the tick."""
+        """One engine tick: admit into free slots, advance chunked
+        prefills by one chunk, then one pooled decode. Returns the number
+        of slots still active after the tick."""
         self._admit()
-        if any(s is not None for s in self._slots):
+        self.metrics.on_occupancy(
+            sum(s is not None for s in self._slots))
+        if self.prefill_chunk is not None:
+            self._chunk_tick()
+        if any(s is not None and s.decoding for s in self._slots):
             self._decode_tick()
         self.metrics.ticks += 1
         return sum(s is not None for s in self._slots)
@@ -356,14 +491,39 @@ class ServeEngine:
             with self._lock:
                 if not self._queue:
                     return
-                req = self._queue.popleft()
-            self._admit_one(req, idx)
+                slot = self._queue[0]
+            budget = (self._n_front + slot.prompt.size
+                      + slot.req.max_new_tokens)
+            try:
+                self.pool.alloc_pages(idx, budget)
+            except PoolExhausted:
+                # keep FIFO order: the head request waits for pages freed
+                # by finishing slots; admission retries every tick
+                self.metrics.pool_exhausted_events += 1
+                return
+            with self._lock:
+                self._queue.popleft()
+            self.metrics.sync_pool(self.pool)
+            self._admit_one(slot, idx)
 
-    def _admit_one(self, req: Request, idx: int) -> None:
-        plen = int(req.prompt.size)
+    def _admit_one(self, slot: _Slot, idx: int) -> None:
+        self.metrics.on_admit(slot.rid)
+        if self.prefill_chunk is not None:
+            # chunked admission: no prefill work here — the chunk tick(s)
+            # stream the prompt through the pool
+            slot.prefilled = 0
+            self._slots[idx] = slot
+            return
+        self._admit_bucketed(slot, idx)
+
+    def _admit_bucketed(self, slot: _Slot, idx: int) -> None:
+        """Whole-prompt admission (dense pools and non-chunkable archs):
+        right-pad to a bucket, prefill at batch 1, splice into the pool."""
+        req = slot.req
+        plen = int(slot.prompt.size)
         bucket = self.bucket_for(plen)
         tokens = np.zeros((1, bucket), np.int32)
-        tokens[0, :plen] = req.prompt
+        tokens[0, :plen] = slot.prompt
         batch = {"tokens": jnp.asarray(tokens)}
         if req.extras:
             batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
@@ -372,16 +532,73 @@ class ServeEngine:
         with self._scope():
             logits, sub = self._prefill_fn(bucket)(self._params, batch,
                                                    last_pos)
-            self._caches = self._insert_fn()(
-                self._caches, sub, jnp.asarray(idx, jnp.int32))
+            insert_args = [self._caches, sub, jnp.asarray(idx, jnp.int32)]
+            if self.pool.kind == "paged":
+                insert_args.append(self.pool.page_row(idx))
+            self._caches = self._insert_fn()(*insert_args)
             tok = int(self._first_token_fn()(
-                logits, jax.random.fold_in(self._key, req.rid))[0])
-        self.metrics.on_admit(req.rid, plen, time.monotonic() - t0)
-        slot = _Slot(req=req, tokens=[tok],
-                     cur_pos=self._n_front + plen, last_token=tok)
+                logits, jax.random.fold_in(self._key, slot.rid))[0])
+        self.metrics.on_prefill_work(plen, time.monotonic() - t0)
+        self.metrics.on_prefill_done()
+        self.metrics.on_first_token(slot.rid)
+        slot.tokens = [tok]
+        slot.last_token = tok
+        slot.cur_pos = self._n_front + plen
         self._slots[idx] = slot
         if self._finished(slot):
             self._finish(idx)
+
+    def _chunk_tick(self) -> None:
+        """Advance every prefilling slot by one prompt chunk (one pooled
+        call). Slots whose final chunk lands sample their first token off
+        the chunk logits and join this very tick's decode."""
+        live = [(i, s) for i, s in enumerate(self._slots)
+                if s is not None and s.prefilling]
+        if not live:
+            return
+        C = self.prefill_chunk
+        tokens = np.zeros((self.slots, C), np.int32)
+        start = np.zeros((self.slots,), np.int32)
+        last = np.zeros((self.slots,), np.int32)
+        active = np.zeros((self.slots,), bool)
+        spans = {}
+        for i, s in live:
+            lo = s.prefilled
+            hi = min(lo + C, int(s.prompt.size))
+            tokens[i, :hi - lo] = s.prompt[lo:hi]
+            start[i] = lo
+            last[i] = hi - lo - 1
+            active[i] = True
+            spans[i] = (lo, hi)
+        t0 = time.monotonic()
+        with self._scope():
+            logits, self._caches = self._chunk_fn()(
+                self._params, jnp.asarray(tokens), self._caches,
+                jnp.asarray(start), jnp.asarray(last),
+                jnp.asarray(active), self.pool.gather_args()["page_table"])
+        real = sum(hi - lo for lo, hi in spans.values())
+        self.metrics.on_prefill_work(real, time.monotonic() - t0,
+                                     chunked=True)
+        finishers = []
+        for i, s in live:
+            lo, hi = spans[i]
+            s.prefilled = hi
+            if s.prefilling:
+                continue
+            with self._scope():
+                tok = int(self._first_token_fn()(
+                    logits[i:i + 1],
+                    jax.random.fold_in(self._key, s.rid))[0])
+            self.metrics.on_prefill_done()
+            self.metrics.on_first_token(s.rid)
+            s.tokens = [tok]
+            s.last_token = tok
+            s.cur_pos = self._n_front + int(s.prompt.size)
+            s.prefilled = -1                # decode phase
+            if self._finished(s):
+                finishers.append(i)
+        for i in finishers:
+            self._finish(i)
 
     def _finished(self, slot: _Slot) -> bool:
         if len(slot.tokens) >= slot.req.max_new_tokens:
@@ -392,13 +609,19 @@ class ServeEngine:
     def _finish(self, idx: int) -> None:
         slot = self._slots[idx]
         self._slots[idx] = None
-        rm = self.metrics.on_finish(slot.req.rid)
+        rm = self.metrics.on_finish(slot.rid)
         if self.scrub_freed_slots:
+            # scrub BEFORE freeing so the slot's still-owned pages are the
+            # ones zeroed (after free() its table row points at trash)
             with self._scope():
-                self._caches = self._reset_fn()(
-                    self._caches, jnp.asarray(idx, jnp.int32))
-        slot.req.future.set_result(GenerationResult(
-            rid=slot.req.rid, prompt=slot.req.prompt,
+                reset_args = [self._caches, jnp.asarray(idx, jnp.int32)]
+                if self.pool.kind == "paged":
+                    reset_args.append(self.pool.page_row(idx))
+                self._caches = self._reset_fn()(*reset_args)
+        self.pool.free(idx)
+        self.metrics.sync_pool(self.pool)
+        slot.future.set_result(GenerationResult(
+            rid=slot.rid, prompt=slot.prompt,
             tokens=list(slot.tokens), metrics=rm))
 
     def _decode_tick(self) -> None:
@@ -406,7 +629,7 @@ class ServeEngine:
         cur_pos = np.zeros((self.slots,), np.int32)
         active = np.zeros((self.slots,), bool)
         for i, s in enumerate(self._slots):
-            if s is None:
+            if s is None or s.prefilling:
                 continue
             tokens[i] = s.last_token
             cur_pos[i] = s.cur_pos
@@ -414,20 +637,22 @@ class ServeEngine:
         n_active = int(active.sum())
         rng = jax.random.fold_in(self._key, 0x5E57E9 + self.metrics.ticks)
         t0 = time.monotonic()
+        step_args = [self._params, jnp.asarray(tokens), self._caches,
+                     jnp.asarray(cur_pos), rng, jnp.asarray(active)]
+        if self.pool.kind == "paged":
+            step_args.append(self.pool.gather_args()["page_table"])
         with self._scope():
-            nxt, self._caches = self._decode_fn()(
-                self._params, jnp.asarray(tokens), self._caches,
-                jnp.asarray(cur_pos), rng, jnp.asarray(active))
+            nxt, self._caches = self._decode_fn()(*step_args)
         nxt = np.asarray(nxt)
         self.metrics.on_decode_tick(n_active, n_active,
                                     time.monotonic() - t0)
         for i, s in enumerate(self._slots):
-            if s is None:
+            if s is None or s.prefilling:
                 continue
             tok = int(nxt[i])
             s.tokens.append(tok)
             s.last_token = tok
             s.cur_pos += 1
-            self.metrics.on_token(s.req.rid)
+            self.metrics.on_token(s.rid)
             if self._finished(s):
                 self._finish(i)

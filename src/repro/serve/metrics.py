@@ -95,11 +95,18 @@ class EngineMetrics:
     decode_tokens: int = 0           # tokens emitted by pooled decode ticks
     prefill_tokens: int = 0          # prompt tokens processed (pre-padding)
     prefills: int = 0
+    chunk_ticks: int = 0             # chunked-prefill pool invocations
     occupied_slot_ticks: int = 0     # Σ active slots over decode ticks
     decode_time_s: float = 0.0       # wall time inside pooled decode calls
     prefill_time_s: float = 0.0      # wall time inside prefill calls
     requests_finished: int = 0       # lifetime total
     finished_tokens: int = 0         # lifetime total over finished requests
+    max_concurrent_slots: int = 0    # high-water mark of occupied slots
+    pool_kind: str = "dense"         # cache pool flavor ("dense"/"paged")
+    total_pages: int = 0             # physical pages incl. the trash page
+    pages_in_use: int = 0            # gauge, engine-synced after alloc/free
+    pages_hwm: int = 0               # allocator high-water mark
+    pool_exhausted_events: int = 0   # admissions deferred for lack of pages
     requests: Dict[int, RequestMetrics] = field(default_factory=dict)
     clock: object = time.monotonic
 
@@ -118,15 +125,30 @@ class EngineMetrics:
         self.requests[rid] = rm
         return rm
 
-    def on_admit(self, rid: int, prompt_len: int, dt: float) -> None:
+    def on_admit(self, rid: int) -> None:
         rm = self.requests[rid]
         rm.admit_t = self.clock()
         rm.admit_tick = self.ticks
-        rm.first_token_t = rm.admit_t     # first token rides the prefill
-        rm.new_tokens = 1
-        self.prefills += 1
-        self.prefill_tokens += prompt_len
+
+    def on_prefill_work(self, tokens: int, dt: float,
+                        chunked: bool = False) -> None:
+        """Prompt tokens pushed through a prefill call (whole-bucket or one
+        chunked-prefill pool tick)."""
+        self.prefill_tokens += tokens
         self.prefill_time_s += dt
+        if chunked:
+            self.chunk_ticks += 1
+
+    def on_prefill_done(self) -> None:
+        self.prefills += 1
+
+    def on_first_token(self, rid: int) -> None:
+        """The request's first token was sampled (straight off the prefill
+        logits — at admission for bucketed prefill, at final-chunk
+        completion for chunked prefill)."""
+        rm = self.requests[rid]
+        rm.first_token_t = self.clock()
+        rm.new_tokens = 1
 
     def on_decode_tick(self, active_slots: int, new_tokens: int,
                        dt: float) -> None:
@@ -134,6 +156,16 @@ class EngineMetrics:
         self.occupied_slot_ticks += active_slots
         self.decode_tokens += new_tokens
         self.decode_time_s += dt
+
+    def on_occupancy(self, occupied_slots: int) -> None:
+        self.max_concurrent_slots = max(self.max_concurrent_slots,
+                                        occupied_slots)
+
+    def sync_pool(self, pool) -> None:
+        """Refresh the page-pool gauges from a
+        :class:`repro.serve.cache.CachePool`."""
+        self.pages_in_use = pool.pages_in_use
+        self.pages_hwm = pool.pages_hwm
 
     def on_token(self, rid: int) -> None:
         self.requests[rid].new_tokens += 1
@@ -171,6 +203,15 @@ class EngineMetrics:
             "requests_finished": self.requests_finished,
             "prefills": self.prefills,
             "prefill_tokens": self.prefill_tokens,
+            "chunk_ticks": self.chunk_ticks,
+            "max_concurrent_slots": self.max_concurrent_slots,
+            "pool": {
+                "kind": self.pool_kind,
+                "total_pages": self.total_pages,
+                "pages_in_use": self.pages_in_use,
+                "pages_hwm": self.pages_hwm,
+                "exhausted_events": self.pool_exhausted_events,
+            },
             "decode_steps": self.decode_steps,
             "decode_tokens": self.decode_tokens,
             "total_tokens": self.finished_tokens,

@@ -193,7 +193,8 @@ def make_bucket_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
 
 
 def make_pool_serve_step(cfg: ModelConfig,
-                         sample_fn: Optional[Callable] = None) -> Callable:
+                         sample_fn: Optional[Callable] = None,
+                         paged: bool = False) -> Callable:
     """One decode tick over a serving engine's whole slot pool.
 
     ``step(params, tokens, caches, cur_pos, rng, active) -> (next, caches)``
@@ -206,14 +207,52 @@ def make_pool_serve_step(cfg: ModelConfig,
     dead — admission overwrites the full row. Slots are independent along
     the batch axis end to end, which is what makes engine outputs match the
     single-request oracle regardless of co-batched neighbors.
+
+    ``paged=True`` grows a trailing ``page_table (S, P)`` argument and
+    runs the paged cache layout. Pages are SHARED physical state — an
+    inactive lane writing through its (stale) table row would clobber a
+    page a later owner still needs — so inactive rows are redirected to
+    the trash page before the model ever sees the table.
     """
-    def step(params, tokens, caches, cur_pos, rng, active):
-        logits, caches = lm.decode_step(cfg, params, tokens, caches,
-                                        cur_pos)
+    def _next(logits, tokens, rng, active):
         if sample_fn is None:
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
             nxt = sample_fn(logits, rng)
-        nxt = jnp.where(active, nxt, tokens)
-        return nxt, caches
+        return jnp.where(active, nxt, tokens)
+
+    if paged:
+        def paged_step(params, tokens, caches, cur_pos, rng, active,
+                       page_table):
+            page_table = jnp.where(active[:, None], page_table, 0)
+            logits, caches = lm.decode_step(cfg, params, tokens, caches,
+                                            cur_pos, page_table=page_table)
+            return _next(logits, tokens, rng, active), caches
+        return paged_step
+
+    def step(params, tokens, caches, cur_pos, rng, active):
+        logits, caches = lm.decode_step(cfg, params, tokens, caches,
+                                        cur_pos)
+        return _next(logits, tokens, rng, active), caches
+    return step
+
+
+def make_chunk_prefill_step(cfg: ModelConfig) -> Callable:
+    """Chunked prefill over the serving engine's slot pool (paged only).
+
+    ``step(params, tokens, caches, start_pos, last_idx, active, page_table)
+    -> (logits, caches)``: ``tokens (S, C)`` is one fixed-size prompt chunk
+    per slot (zeros for slots with nothing to prefill this tick),
+    ``start_pos (S,)`` the chunk's absolute start position, ``last_idx
+    (S,)`` the within-chunk readout index (meaningful on a prompt's final
+    chunk). ONE compile covers every prompt length — the engine admits a
+    prompt as ``ceil(len / C)`` invocations interleaved with decode ticks.
+    Inactive lanes are redirected to the trash page exactly like the paged
+    decode tick.
+    """
+    def step(params, tokens, caches, start_pos, last_idx, active,
+             page_table):
+        page_table = jnp.where(active[:, None], page_table, 0)
+        return lm.prefill_chunk(cfg, params, tokens, caches, start_pos,
+                                last_idx, page_table)
     return step

@@ -1,18 +1,25 @@
-"""The serving subsystem (`repro.serve`): continuous batching, bucketed
-prefill compile discipline, oracle parity, checkpoint restore.
+"""The serving subsystem (`repro.serve`): continuous batching, cache-pool
+admission (paged + dense), compile discipline, oracle parity, checkpoint
+restore.
 
-The three acceptance properties of the engine:
+The acceptance properties of the engine:
 
 (a) **continuous batching** — a short request admitted after a long one
     finishes first, and its freed slot is refilled from the queue while the
     long request keeps decoding (tick-indexed, so machine speed is
     irrelevant);
-(b) **compile discipline** — bucketed prefill traces exactly once per
-    (bucket, context), gated by the engine's CompileCache trace counter;
+(b) **compile discipline** — chunked prefill on the default paged pool
+    traces ONE prefill for every prompt length; the dense pool's bucketed
+    prefill traces exactly once per (bucket, context) — both gated by the
+    engine's CompileCache trace counter;
 (c) **oracle parity** — greedy engine outputs equal the single-request
-    ``prefill`` + ``decode_step`` oracle per request, independent of
-    co-batched neighbors (this also proves the right-padded bucket prefill
-    and the per-slot vector-``cur_pos`` decode are exact).
+    ``prefill`` + ``decode_step`` oracle per request, on BOTH pool kinds,
+    independent of co-batched neighbors (this also proves the page-table
+    gather, the chunked prefill split, and the per-slot vector-``cur_pos``
+    decode are exact);
+(d) **paged capacity** — at equal cache memory, a paged pool sustains
+    strictly more concurrent slots than dense, and exhaustion defers
+    admission (backpressure) instead of crashing.
 """
 
 import os
@@ -25,8 +32,8 @@ import pytest
 from repro.configs import registry
 from repro.kernels.context import ExecutionContext
 from repro.models import lm
-from repro.serve import (GREEDY, SamplingParams, ServeClient, ServeEngine,
-                         loader, sample_logits)
+from repro.serve import (GREEDY, Request, SamplingParams, ServeClient,
+                         ServeEngine, loader, sample_logits)
 
 ARCH = "smollm-135m-smoke"
 
@@ -43,6 +50,10 @@ def params(cfg):
 
 def _prompt(rng, cfg, n):
     return rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+
+
+def _req(prompt, max_new=4, **kw):
+    return Request(prompt=prompt, max_new_tokens=max_new, **kw)
 
 
 def _oracle_generate(cfg, params, prompt, max_new, max_len):
@@ -111,9 +122,9 @@ class TestSampling:
 def test_continuous_batching_refills_freed_slot(cfg, params):
     eng = ServeEngine(cfg, params, slots=2, max_len=64, seed=0)
     rng = np.random.default_rng(0)
-    fa = eng.submit(_prompt(rng, cfg, 6), max_new_tokens=12)   # long
-    fb = eng.submit(_prompt(rng, cfg, 5), max_new_tokens=3)    # short
-    fc = eng.submit(_prompt(rng, cfg, 7), max_new_tokens=3)    # queued
+    fa = eng.submit(_req(_prompt(rng, cfg, 6), max_new=12))    # long
+    fb = eng.submit(_req(_prompt(rng, cfg, 5), max_new=3))     # short
+    fc = eng.submit(_req(_prompt(rng, cfg, 7), max_new=3))     # queued
     eng.run_until_idle()
     a, b, c = fa.result(0).metrics, fb.result(0).metrics, fc.result(0).metrics
 
@@ -125,8 +136,10 @@ def test_continuous_batching_refills_freed_slot(cfg, params):
     assert b.finish_tick < a.finish_tick
     assert c.admit_tick == b.finish_tick + 1
     assert c.finish_tick < a.finish_tick
-    # the long request never stalled: its admission tick yields two tokens
-    # (prefill sample + that tick's decode), then one token per tick
+    # the long request never stalled: a single-chunk prompt admits, samples
+    # its first token AND takes that tick's decode in the admission tick
+    # (two tokens), then one token per tick — the dense engine's exact
+    # arithmetic, preserved by chunked admission for prompts <= one chunk
     assert a.finish_tick - a.admit_tick == a.new_tokens - 2
     assert [len(f.result(0).tokens) for f in (fa, fb, fc)] == [12, 3, 3]
 
@@ -137,19 +150,40 @@ def test_stop_token_frees_slot_early(cfg, params):
     prompt = _prompt(rng, cfg, 5)
     # oracle-known second token becomes the stop token
     want = _oracle_generate(cfg, params, prompt, 4, 64)
-    fut = eng.submit(prompt, max_new_tokens=16, stop_token=want[1])
+    fut = eng.submit(_req(prompt, max_new=16, stop_token=want[1]))
     eng.run_until_idle()
     assert fut.result(0).tokens == want[:2]
 
 
 # ---------------------------------------------------------------------------
-# (b) compile discipline: one trace per (bucket, context)
+# (b) compile discipline
 # ---------------------------------------------------------------------------
 
-def test_bucketed_prefill_compiles_once_per_bucket(cfg, params):
+def test_chunked_prefill_compiles_once_for_all_lengths(cfg, params):
+    """The paged default: prompts spanning one, two, and three chunks all
+    share ONE chunk-prefill trace — there are no per-bucket prefills."""
     eng = ServeEngine(cfg, params, slots=2, max_len=64, seed=0)
+    assert eng.pool.kind == "paged" and eng.prefill_chunk == 16
     rng = np.random.default_rng(2)
-    futs = [eng.submit(_prompt(rng, cfg, n), max_new_tokens=2)
+    futs = [eng.submit(_req(_prompt(rng, cfg, n), max_new=2))
+            for n in (5, 7, 20, 3, 40)]
+    eng.run_until_idle()
+    for f in futs:
+        f.result(0)
+    traces = eng.compile_stats["traces"]
+    assert not any(k[0] == "prefill" for k in traces), traces
+    assert traces[("chunk_prefill", cfg.name, 2, 16, eng.ctx)] == 1
+    assert traces[("decode", cfg.name, 2, "paged", GREEDY, eng.ctx)] == 1
+    # chunk prefill + pooled decode + first-token sample: three compiles
+    # serve every prompt length the engine will ever see
+    assert eng.compile_stats["compiles"] == 3
+
+
+def test_bucketed_prefill_compiles_once_per_bucket(cfg, params):
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, seed=0,
+                      pool="dense")
+    rng = np.random.default_rng(2)
+    futs = [eng.submit(_req(_prompt(rng, cfg, n), max_new=2))
             for n in (5, 7, 8, 3, 6)]      # all land in the 8-bucket
     eng.run_until_idle()
     for f in futs:
@@ -161,7 +195,7 @@ def test_bucketed_prefill_compiles_once_per_bucket(cfg, params):
     assert (bucket, batch) == (8, 1) and isinstance(ctx, ExecutionContext)
 
     # a longer prompt opens exactly one new bucket; everything else stays
-    eng.submit(_prompt(rng, cfg, 20), max_new_tokens=2)
+    eng.submit(_req(_prompt(rng, cfg, 20), max_new=2))
     eng.run_until_idle()
     prefills = {k: v for k, v in eng.compile_stats["traces"].items()
                 if k[0] == "prefill"}
@@ -169,20 +203,23 @@ def test_bucketed_prefill_compiles_once_per_bucket(cfg, params):
     assert all(v == 1 for v in prefills.values())
     # the pooled decode step and the cache-splice each traced once, ever
     assert eng.compile_stats["traces"][
-        ("decode", cfg.name, 2, GREEDY, eng.ctx)] == 1
+        ("decode", cfg.name, 2, "dense", GREEDY, eng.ctx)] == 1
     assert eng.compile_stats["traces"][
-        ("insert", cfg.name, 2, eng.ctx)] == 1
+        ("insert", cfg.name, 2, "dense", eng.ctx)] == 1
 
 
 def test_exact_buckets_for_sequential_state_archs():
     rcfg = registry.get("recurrentgemma-2b-smoke")
     eng = ServeEngine(rcfg, loader.init_params(rcfg, seed=0), slots=1,
                       max_len=64)
-    # padding would fold into the RG-LRU state / ring buffer: exact lengths
+    # padding would fold into the RG-LRU state / ring buffer: exact
+    # lengths, and the paged default silently falls back to a dense pool
+    assert eng.pool.kind == "dense" and eng.prefill_chunk is None
     assert eng.bucket_for(5) == 5 and eng.bucket_for(13) == 13
     scfg = registry.get(ARCH)
     eng2 = ServeEngine(scfg, loader.init_params(scfg, seed=0), slots=1,
                        max_len=64)
+    assert eng2.pool.kind == "paged"
     assert eng2.bucket_for(5) == 8 and eng2.bucket_for(13) == 16
 
 
@@ -198,7 +235,7 @@ def test_sequential_state_arch_serves_end_to_end():
     rng = np.random.default_rng(7)
     prompts = [_prompt(rng, cfg, 5), _prompt(rng, cfg, 20)]
     eng = ServeEngine(cfg, params, slots=2, max_len=48, seed=0)
-    futs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    futs = [eng.submit(_req(p, max_new=4)) for p in prompts]
     eng.run_until_idle()
     for p, f in zip(prompts, futs):
         assert f.result(0).tokens == _oracle_generate(cfg, params, p, 4, 48)
@@ -216,8 +253,7 @@ def test_client_driver_crash_fails_futures():
         raise RuntimeError("tick exploded")
     eng.step = boom
     with ServeClient(eng) as client:
-        futs = [client.submit([1, 2, 3], max_new_tokens=4)
-                for _ in range(2)]
+        futs = [client.submit(_req([1, 2, 3])) for _ in range(2)]
         with pytest.raises(RuntimeError, match="tick exploded"):
             futs[0].result(timeout=30)
         with pytest.raises(RuntimeError, match="tick exploded"):
@@ -225,35 +261,45 @@ def test_client_driver_crash_fails_futures():
         # the abort path ran, so the client is marked closed: further
         # submissions are refused loudly instead of queueing forever
         with pytest.raises(RuntimeError, match="closed"):
-            client.submit([1], max_new_tokens=1)
+            client.submit(_req([1], max_new=1))
     assert not eng.metrics.requests        # aborted records were evicted
+    assert eng.pool.pages_in_use == 0      # aborted slots freed their pages
 
 
 # ---------------------------------------------------------------------------
-# (c) oracle parity: co-batching never changes a request's tokens
+# (c) oracle parity: pool layout and co-batching never change tokens
 # ---------------------------------------------------------------------------
 
-def test_engine_matches_single_request_oracle(cfg, params):
-    """Three requests of different lengths through 2 slots (so admission
-    order, co-batching neighbors, and slot refill all differ per request)
-    must reproduce the single-request oracle token-for-token."""
+@pytest.mark.parametrize("pool", ["paged", "dense"])
+def test_engine_matches_single_request_oracle(cfg, params, pool):
+    """Requests of different lengths through 2 slots (so admission order,
+    co-batching neighbors, and slot refill all differ per request) must
+    reproduce the single-request oracle token-for-token — on the paged
+    pool (where the 20-token prompt spans TWO prefill chunks, gating the
+    chunked split + page-table gather) and on dense."""
     rng = np.random.default_rng(3)
-    prompts = [_prompt(rng, cfg, n) for n in (5, 9, 12)]
-    eng = ServeEngine(cfg, params, slots=2, max_len=64, seed=0)
-    futs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    prompts = [_prompt(rng, cfg, n) for n in (5, 9, 20)]
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, seed=0, pool=pool)
+    assert eng.pool.kind == pool
+    if pool == "paged":
+        assert prompts[2].size > eng.prefill_chunk   # multi-chunk coverage
+    futs = [eng.submit(_req(p, max_new=6)) for p in prompts]
     eng.run_until_idle()
     for p, f in zip(prompts, futs):
         want = _oracle_generate(cfg, params, p, 6, 64)
         assert f.result(0).tokens == want
+    assert eng.pool.pages_in_use == 0      # every page recycled on finish
 
 
 def test_scrubbed_slots_do_not_change_outputs(cfg, params):
-    """reset_cache_slot hygiene between requests is a no-op for results."""
+    """reset_slot hygiene between requests is a no-op for results — on the
+    paged pool this scrubs through the slot's page row before the pages
+    are recycled."""
     rng = np.random.default_rng(4)
     prompts = [_prompt(rng, cfg, n) for n in (4, 11, 6, 8)]
     eng = ServeEngine(cfg, params, slots=2, max_len=64, seed=0,
                       scrub_freed_slots=True)
-    futs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    futs = [eng.submit(_req(p, max_new=5)) for p in prompts]
     eng.run_until_idle()
     for p, f in zip(prompts, futs):
         assert f.result(0).tokens == _oracle_generate(cfg, params, p, 5, 64)
@@ -264,23 +310,117 @@ def test_async_client_resolves_futures(cfg, params):
     rng = np.random.default_rng(5)
     prompts = [_prompt(rng, cfg, n) for n in (5, 9)]
     with ServeClient(eng) as client:
-        futs = [client.submit(p, max_new_tokens=4) for p in prompts]
+        futs = [client.submit(_req(p)) for p in prompts]
         results = [f.result(timeout=300) for f in futs]
     for p, r in zip(prompts, results):
         assert r.tokens == _oracle_generate(cfg, params, p, 4, 64)
     snap = eng.metrics.snapshot()
     assert snap["requests_finished"] == 2
     assert snap["total_tokens"] == 8
+    assert snap["pool"]["kind"] == "paged"
+    assert snap["pool"]["pages_in_use"] == 0
+    assert snap["pool"]["pages_hwm"] > 0
 
 
 def test_submit_validation(cfg, params):
     eng = ServeEngine(cfg, params, slots=1, max_len=16)
-    with pytest.raises(ValueError, match="budget"):
-        eng.submit(np.arange(10), max_new_tokens=10)
+    # the removed positional form breaks loudly with the migration spelled
+    # out, through the engine and the client alike
+    with pytest.raises(TypeError, match="repro.serve.Request"):
+        eng.submit([1, 2, 3], max_new_tokens=4)
+    with pytest.raises(TypeError, match="repro.serve.Request"):
+        eng.submit(_req([1, 2, 3]), 4)
+    with ServeClient(eng) as client:
+        with pytest.raises(TypeError, match="repro.serve.Request"):
+            client.submit([1, 2, 3], max_new_tokens=4)
+    # Request validates its own fields at construction
     with pytest.raises(ValueError, match="empty"):
-        eng.submit([], max_new_tokens=2)
+        Request(prompt=[], max_new_tokens=2)
     with pytest.raises(ValueError, match="max_new_tokens"):
-        eng.submit([1, 2], max_new_tokens=0)
+        Request(prompt=[1, 2], max_new_tokens=0)
+    # engine-dependent checks stay at submit time
+    with pytest.raises(ValueError, match="budget"):
+        eng.submit(_req(np.arange(10), max_new=10))
+    with pytest.raises(ValueError, match="sampling"):
+        eng.submit(_req([1, 2], sampling=SamplingParams(temperature=0.7)))
+    # an explicit rid collides with an in-flight request
+    f = eng.submit(_req([1, 2], max_new=1, rid=7))
+    with pytest.raises(ValueError, match="rid 7"):
+        eng.submit(_req([3, 4], max_new=1, rid=7))
+    eng.run_until_idle()
+    f.result(0)
+
+
+def test_request_is_frozen_and_normalized():
+    r = Request(prompt=np.asarray([[1, 2], [3, 4]]), max_new_tokens=2)
+    assert r.prompt == (1, 2, 3, 4)        # any int array-like flattens
+    assert all(isinstance(t, int) for t in r.prompt)
+    with pytest.raises(AttributeError):
+        r.max_new_tokens = 5
+
+
+# ---------------------------------------------------------------------------
+# (d) paged capacity: more concurrency at equal memory, typed backpressure
+# ---------------------------------------------------------------------------
+
+def test_paged_sustains_more_slots_than_dense_at_equal_memory(cfg, params):
+    """Equal KV memory — dense 2 slots x 48 rows = 96 positions vs paged
+    12 usable pages x 8 = 96 positions — but the paged engine reserves per
+    *request* budget (11 tokens -> 2 pages), so it runs 4 requests
+    concurrently where dense can only ever co-batch 2. Outputs stay
+    oracle-exact and every page drains back to the free list."""
+    rng = np.random.default_rng(8)
+    prompts = [_prompt(rng, cfg, 5) for _ in range(4)]
+    want = [_oracle_generate(cfg, params, p, 6, 48) for p in prompts]
+
+    dense = ServeEngine(cfg, params, slots=2, max_len=48, seed=0,
+                        pool="dense")
+    dfuts = [dense.submit(_req(p, max_new=6)) for p in prompts]
+    dense.run_until_idle()
+
+    paged = ServeEngine(cfg, params, slots=4, max_len=48, seed=0,
+                        pool="paged", page_size=8, num_pages=13)
+    assert (paged.pool.total_pages - 1) * paged.pool.page_size \
+        == dense.slots * dense.max_len
+    pfuts = [paged.submit(_req(p, max_new=6)) for p in prompts]
+    paged.run_until_idle()
+
+    for w, df, pf in zip(want, dfuts, pfuts):
+        assert df.result(0).tokens == w
+        assert pf.result(0).tokens == w
+    dsnap, psnap = dense.metrics.snapshot(), paged.metrics.snapshot()
+    assert dsnap["max_concurrent_slots"] == 2
+    assert psnap["max_concurrent_slots"] == 4
+    assert psnap["max_concurrent_slots"] > dsnap["max_concurrent_slots"]
+    # 4 concurrent requests x 2 pages, all recycled after the drain
+    assert psnap["pool"]["pages_hwm"] == 8
+    assert paged.pool.pages_in_use == 0
+    assert len(paged.pool.free_list()) == paged.pool.total_pages - 1
+
+
+def test_pool_exhaustion_defers_admission(cfg, params):
+    """A pool too small for every queued request admits what fits, counts
+    the exhaustion, keeps the rest queued FIFO, and finishes everything
+    once finished requests recycle their pages — backpressure, no crash,
+    no token drift."""
+    rng = np.random.default_rng(9)
+    prompts = [_prompt(rng, cfg, 5) for _ in range(3)]
+    # 4 usable pages x 8 = 32 positions; each request reserves 2 pages, so
+    # only two of the four slots can ever be occupied at once
+    eng = ServeEngine(cfg, params, slots=4, max_len=48, seed=0,
+                      pool="paged", page_size=8, num_pages=5)
+    futs = [eng.submit(_req(p, max_new=6)) for p in prompts]
+    eng.run_until_idle()
+    for p, f in zip(prompts, futs):
+        assert f.result(0).tokens == _oracle_generate(cfg, params, p, 6, 48)
+    snap = eng.metrics.snapshot()
+    assert snap["max_concurrent_slots"] == 2       # pages, not slots, bind
+    assert snap["pool"]["exhausted_events"] > 0
+    assert snap["pool"]["pages_hwm"] == 4
+    assert eng.pool.pages_in_use == 0
+    # a request that could NEVER fit is rejected at submit, not queued
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(_req(_prompt(rng, cfg, 40), max_new=2))
 
 
 # ---------------------------------------------------------------------------
@@ -315,7 +455,7 @@ class TestCheckpointRestore:
         # and the engine on restored params reproduces the live oracle
         eng = ServeEngine(cfg, restored, slots=1, max_len=32)
         prompt = np.asarray(batch["tokens"])[0]
-        fut = eng.submit(prompt, max_new_tokens=4)
+        fut = eng.submit(_req(prompt))
         eng.run_until_idle()
         assert fut.result(0).tokens == _oracle_generate(
             cfg, trainer.params, prompt, 4, 32)
@@ -357,7 +497,9 @@ class TestCheckpointRestore:
 def test_sharded_engine_matches_unsharded():
     """The same engine code serving under an 8-device ("data",) mesh —
     butterfly sites batch-sharded via shard_map — reproduces the
-    single-device engine token-for-token.
+    single-device engine token-for-token, on the default PAGED pool with
+    a multi-chunk prompt in the mix (page-table gather + chunked prefill
+    under GSPMD).
 
     float32 compute: under bf16 the two GSPMD layouts can disagree by one
     rounding ulp, which is enough to flip a greedy argmax on an exact bf16
@@ -370,12 +512,14 @@ def test_sharded_engine_matches_unsharded():
     params = loader.init_params(cfg, seed=0)
     rng = np.random.default_rng(6)
     prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
-               for n in (5, 9, 12)]
+               for n in (5, 9, 20)]
 
     def run(context):
         eng = ServeEngine(cfg, params, slots=2, max_len=48, seed=0,
                           context=context)
-        futs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        assert eng.pool.kind == "paged"
+        assert prompts[2].size > eng.prefill_chunk   # multi-chunk coverage
+        futs = [eng.submit(_req(p, max_new=5)) for p in prompts]
         eng.run_until_idle()
         return [f.result(0).tokens for f in futs], eng
 
