@@ -17,6 +17,13 @@ the smoke arch and emits:
   prompts span multiple prefill chunks, half fit in one), so the row times
   the page-table gather path plus chunk/decode tick interleaving; pages
   high-water-mark rides the derived column;
+* ``serve/preempt_overload`` — the mixed trace drained through a
+  deliberately page-starved paged engine under ``admission="incremental"``
+  (prompt-only reservation, per-tick growth, preempt-youngest/recompute):
+  the row times graceful degradation under oversubscription, and the
+  derived column carries the lifecycle counters (``preempted``,
+  ``recompute_tokens``, exhaustion events, concurrency high-water-mark)
+  that the eager policy structurally cannot exercise;
 * ``serve/large_pool`` — the 16-slot variant, emitted as *skipped* on CPU
   (one tick is minutes of wall clock at that batch) and timed on TPU.
 
@@ -64,13 +71,15 @@ def _drain(engine, prompts, max_new):
 
 
 def _run_engine(slots: int, requests: int, max_new: int, seed: int = 0,
-                pool: str = "dense"):
+                pool: str = "dense", admission: str = "eager",
+                num_pages=None):
     from repro.configs import registry
     from repro.serve import ServeEngine, loader
 
     cfg = registry.get("smollm-135m-smoke")
     _, params = loader.load_for_serving(cfg, seed=0)
     engine = ServeEngine(cfg, params, slots=slots, max_len=96, pool=pool,
+                         admission=admission, num_pages=num_pages,
                          seed=seed)
     rng = np.random.default_rng(seed)
     # burn-in: one request per power-of-two bucket warms every dense
@@ -122,6 +131,26 @@ def run(requests: int = 24, max_new: int = 8) -> None:
         f"chunk_ticks={snap['chunk_ticks']};"
         f"pages_hwm={snap['pool']['pages_hwm']};"
         f"pages_total={snap['pool']['total_pages']};"
+        f"requests={snap['requests_finished']};"
+        f"tokens={snap['total_tokens']}")
+
+    # oversubscription: 8 usable 16-token pages across 4 slots cannot hold
+    # every admitted request's full budget (a long prompt + 8 new tokens
+    # is 4 pages), so incremental admission must grow/preempt/recompute to
+    # drain the same mixed trace — the row times that degradation path
+    snap, wall = _run_engine(slots=4, requests=requests, max_new=max_new,
+                             pool="paged", admission="incremental",
+                             num_pages=9)
+    tok_s = snap["decode_tok_per_s"]
+    common.emit(
+        "serve/preempt_overload", wall * 1e6,
+        f"us_per_tok={1e6 / tok_s:.1f};tok_s={tok_s:.1f};"
+        f"preempted={snap['preempted']};"
+        f"recompute_tokens={snap['recompute_tokens']};"
+        f"exhausted={snap['pool']['exhausted_events']};"
+        f"max_concurrent={snap['max_concurrent_slots']};"
+        f"pages_hwm={snap['pool']['pages_hwm']};"
+        f"p95_ttft_ms={snap['ttft_ms']['p95']};"
         f"requests={snap['requests_finished']};"
         f"tokens={snap['total_tokens']}")
 

@@ -8,6 +8,12 @@ can't serve — and advances every in-flight request one token per fused
 pooled decode tick. Per-request TTFT/TPOT and the engine's
 throughput/occupancy/pages snapshot are printed at the end.
 
+A second act demos the lifecycle paths on a deliberately tiny page pool:
+a request *preempted* mid-decode under ``admission="incremental"`` (pages
+freed, request requeued, prefix recomputed — same greedy tokens out) and a
+request *cancelled* via ``client.cancel(rid)`` (its future resolves with
+``RequestCancelled``).
+
 Run: ``PYTHONPATH=src python examples/serve_lm.py --arch smollm-135m-smoke``
 Try ``--arch recurrentgemma-2b-smoke`` (RG-LRU state: the engine switches
 to exact-length prefill buckets, since padding would corrupt the recurrent
@@ -95,6 +101,47 @@ def main():
           f"{snap['pool']['total_pages']})  compiles: {stats['compiles']}"
           + (f" (prefill buckets: {buckets})" if buckets else
              " (chunked prefill: one compile for all prompt lengths)"))
+
+    lifecycle_demo(cfg, params, rng)
+
+
+def lifecycle_demo(cfg, params, rng):
+    """Preemption + cancellation on a deliberately page-starved engine."""
+    from repro.serve import (Request, RequestCancelled, ServeClient,
+                             ServeEngine)
+
+    print("\n-- lifecycle demo: tiny pool, incremental admission --")
+    try:
+        # 2 slots but only 4 usable 8-token pages: both requests' full
+        # budgets cannot co-reside, so incremental admission must preempt
+        engine = ServeEngine(cfg, params, slots=2, max_len=32,
+                             page_size=8, num_pages=5, prefill_chunk=4,
+                             admission="incremental", seed=0)
+    except ValueError as e:
+        print(f"  skipped: {e}")
+        return
+    with ServeClient(engine) as client:
+        mk = lambda: rng.integers(0, cfg.vocab_size, size=5)  # noqa: E731
+        f1 = client.submit(Request(prompt=mk(), max_new_tokens=14))
+        f2 = client.submit(Request(prompt=mk(), max_new_tokens=14))
+        f3 = client.submit(Request(prompt=mk(), max_new_tokens=14,
+                                   rid=99))
+        client.cancel(99)
+        for fut in (f1, f2):
+            r = fut.result(timeout=600)
+            tag = (f"preempted x{r.metrics.preemptions}, prefix recomputed"
+                   if r.metrics.preemptions else "never preempted")
+            print(f"  req[{r.rid}] finished with {len(r.tokens)} tokens "
+                  f"({tag})")
+        try:
+            f3.result(timeout=600)
+            print("  req[99] finished before the cancel landed")
+        except RequestCancelled as e:
+            print(f"  req[99] cancelled: {e}")
+    snap = engine.metrics.snapshot()
+    print(f"  engine counters: preempted={snap['preempted']} "
+          f"recompute_tokens={snap['recompute_tokens']} "
+          f"cancelled={snap['cancelled']}")
 
 
 if __name__ == "__main__":

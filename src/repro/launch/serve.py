@@ -10,6 +10,12 @@ plus the engine's JSON metrics snapshot. ``--checkpoint-dir`` restores the
 newest valid :mod:`repro.checkpoint` checkpoint (fresh init otherwise);
 ``--mesh-shape 8`` serves over an 8-device ``("data",)`` mesh —
 ``--simulated-devices 8`` simulates one on CPU.
+
+Robustness knobs: ``--admission incremental`` switches to prompt-only page
+reservation with preempt-youngest/recompute (vLLM's policy);
+``--queue-limit N`` sheds submits beyond N waiting with ``QueueFull``;
+``--fault-seed S`` arms a seeded ``FaultInjector`` forcing ``PoolExhausted``
+at ``--fault-rate`` per allocation, so recovery paths run under load.
 """
 
 import argparse
@@ -46,6 +52,22 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunked-prefill chunk size; 0 = whole-bucket "
                          "admission")
+    ap.add_argument("--admission", default="eager",
+                    choices=("eager", "incremental"),
+                    help="page reservation policy: eager = whole-budget at "
+                         "admission (no preemption); incremental = prompt-"
+                         "only + per-tick growth with preempt-youngest/"
+                         "recompute on exhaustion")
+    ap.add_argument("--queue-limit", type=int, default=0,
+                    help="bounded admission queue: submits beyond this "
+                         "many waiting requests are shed with QueueFull "
+                         "(0 = unbounded)")
+    ap.add_argument("--fault-seed", type=int, default=-1,
+                    help="arm a FaultInjector with this seed: forced "
+                         "PoolExhausted at pool.alloc on a Bernoulli "
+                         "schedule (-1 = no injection)")
+    ap.add_argument("--fault-rate", type=float, default=0.05,
+                    help="per-call fire probability for --fault-seed")
     ap.add_argument("--min-prompt", type=int, default=4)
     ap.add_argument("--max-prompt", type=int, default=48)
     ap.add_argument("--rate", type=float, default=0.0,
@@ -68,8 +90,9 @@ def main():
 
     from repro.configs import registry
     from repro.kernels.context import ExecutionContext
-    from repro.serve import (Request, SamplingParams, ServeClient,
-                             ServeEngine, loader)
+    from repro.serve import (FaultInjector, QueueFull, Request,
+                             SamplingParams, ServeClient, ServeEngine,
+                             loader)
 
     cfg = registry.get(args.arch)
     context = None
@@ -87,6 +110,10 @@ def main():
     step, params = loader.load_for_serving(cfg, args.checkpoint_dir,
                                            seed=args.seed)
     src = f"checkpoint step {step}" if step is not None else "fresh init"
+    faults = None
+    if args.fault_seed >= 0:
+        faults = FaultInjector(seed=args.fault_seed,
+                               rates={"pool.alloc": args.fault_rate})
     engine = ServeEngine(
         cfg, params, slots=args.slots, max_len=args.max_len,
         pool=args.pool, page_size=args.page_size,
@@ -94,10 +121,12 @@ def main():
         prefill_chunk=args.prefill_chunk or None,
         sampling=SamplingParams(temperature=args.temperature,
                                 top_k=args.top_k, top_p=args.top_p),
-        context=context, seed=args.seed)
+        admission=args.admission, queue_limit=args.queue_limit or None,
+        faults=faults, context=context, seed=args.seed)
     print(f"[serve] {cfg.name} | params: {src} | slots={args.slots} "
           f"max_len={args.max_len} pool={engine.pool.kind} "
-          f"chunk={engine.prefill_chunk} sampling=(T={args.temperature}, "
+          f"chunk={engine.prefill_chunk} admission={engine.admission} "
+          f"sampling=(T={args.temperature}, "
           f"k={args.top_k}, p={args.top_p})"
           + (f" | mesh={engine.ctx.mesh_layout()}" if engine.mesh else ""))
 
@@ -122,22 +151,28 @@ def main():
                 size=(1, cfg.enc_seq, cfg.d_model)).astype("float32")
         return out or None
 
-    futs = []
+    futs, shed = [], 0
     with ServeClient(engine) as client:
         for i, plen in enumerate(lengths):
             prompt = rng.integers(0, cfg.vocab_size, size=int(plen))
-            futs.append(client.submit(Request(
-                prompt=prompt, max_new_tokens=args.max_new,
-                extras=extras())))
+            try:
+                futs.append(client.submit(Request(
+                    prompt=prompt, max_new_tokens=args.max_new,
+                    extras=extras())))
+            except QueueFull:
+                # bounded queue shed this request: a real client retries
+                # against a replica; the replay just counts it
+                shed += 1
             if args.rate > 0 and i + 1 < args.requests:
                 time.sleep(rng.exponential(1.0 / args.rate))
         for fut in futs:
             r = fut.result(timeout=600)
             m = r.metrics
+            pre = f" preempt={m.preemptions}" if m.preemptions else ""
             print(f"  req[{r.rid:03d}] prompt={m.prompt_len:3d} "
                   f"new={m.new_tokens:3d} ttft={m.ttft * 1e3:7.1f} ms "
                   f"tpot={m.tpot * 1e3:6.1f} ms "
-                  f"latency={m.latency * 1e3:7.1f} ms")
+                  f"latency={m.latency * 1e3:7.1f} ms{pre}")
 
     snap = engine.metrics.snapshot()
     print(f"[serve] {snap['requests_finished']} requests, "
@@ -148,6 +183,14 @@ def main():
           f"pool={snap['pool']['kind']} pages_hwm="
           f"{snap['pool']['pages_hwm']}/{snap['pool']['total_pages']} | "
           f"compiles={engine.compile_stats['compiles']}")
+    if (shed or snap["preempted"] or snap["cancelled"]
+            or snap["deadline_expired"] or faults is not None):
+        inj = (f" | faults={faults.summary()}" if faults is not None
+               else "")
+        print(f"[serve] lifecycle: preempted={snap['preempted']} "
+              f"(recompute={snap['recompute_tokens']} tok) "
+              f"shed={shed} cancelled={snap['cancelled']} "
+              f"deadline_expired={snap['deadline_expired']}{inj}")
     if args.metrics_json:
         with open(args.metrics_json, "w") as f:
             json.dump(snap, f, indent=1)

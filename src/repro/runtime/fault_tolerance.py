@@ -4,7 +4,10 @@ Single-host container, so hardware failures are *simulated*, but the control
 logic is the real thing a 1000-node deployment needs:
 
 * :class:`HeartbeatMonitor` — workers ping; a watchdog marks workers dead
-  after ``timeout`` seconds of silence and fires a callback.
+  after ``timeout`` seconds of silence and fires a callback. Also wired
+  around the serving stack: :class:`repro.serve.client.ServeClient`
+  (``tick_timeout=``) registers its driver thread as a worker so a wedged
+  engine tick is detected and surfaced instead of hanging futures.
 * :func:`plan_elastic_mesh` — given surviving host/device counts and the
   desired axis priorities, returns the largest valid (pod, data, model) mesh
   that divides the workload; composes with
@@ -76,6 +79,13 @@ class HeartbeatMonitor:
     def close(self) -> None:
         self._stop.set()
         self._thread.join(timeout=2)
+
+    def __enter__(self) -> "HeartbeatMonitor":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
 
 # ---------------------------------------------------------------------------

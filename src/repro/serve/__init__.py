@@ -12,18 +12,26 @@
 The engine serves over a :class:`CachePool` — paged by default
 (``pool="paged"``: fixed-size pages, per-slot page tables, free-list
 recycling, chunked prefill), with the dense PR-5 layout available as
-``pool="dense"`` for bisection. See :mod:`repro.serve.engine` for the
-tick-loop / compile-cache design, :mod:`repro.serve.cache` for the pool
-API, and ``python -m repro.launch.serve --help`` for the workload-replay
-CLI.
+``pool="dense"`` for bisection. Admission is ``"eager"`` (whole-budget
+page reservation) or ``"incremental"`` (prompt-only reservation, per-tick
+growth, preempt-youngest/recompute on exhaustion). Lifecycle failures are
+typed — :class:`QueueFull`, :class:`DeadlineExceeded`,
+:class:`RequestCancelled`, :class:`EngineWedged` — and every recovery
+path is drivable on a seeded schedule via
+:class:`~repro.serve.faults.FaultInjector`. See :mod:`repro.serve.engine`
+for the tick-loop / compile-cache design, :mod:`repro.serve.cache` for
+the pool API, :mod:`repro.serve.faults` for fault injection, and
+``python -m repro.launch.serve --help`` for the workload-replay CLI.
 """
 
-from repro.serve import cache, loader, metrics, sampling
+from repro.serve import cache, faults, loader, metrics, sampling
 from repro.serve.cache import (CachePool, DenseCachePool, PagedCachePool,
                                PoolExhausted, make_pool)
-from repro.serve.client import ServeClient
-from repro.serve.engine import (CompileCache, GenerationResult, Request,
-                                ServeEngine)
+from repro.serve.client import EngineWedged, ServeClient
+from repro.serve.engine import (CompileCache, DeadlineExceeded,
+                                GenerationResult, QueueFull, Request,
+                                RequestCancelled, ServeEngine)
+from repro.serve.faults import FaultInjector, InjectedFault
 from repro.serve.metrics import EngineMetrics, RequestMetrics
 from repro.serve.sampling import GREEDY, SamplingParams, sample_logits
 
@@ -32,13 +40,17 @@ __all__ = [
     "ServeEngine", "ServeClient", "CompileCache",
     # request/result surface
     "Request", "GenerationResult",
+    # typed lifecycle failures
+    "QueueFull", "DeadlineExceeded", "RequestCancelled", "EngineWedged",
     # cache pools
     "CachePool", "DenseCachePool", "PagedCachePool", "PoolExhausted",
     "make_pool",
+    # fault injection
+    "FaultInjector", "InjectedFault",
     # metrics
     "EngineMetrics", "RequestMetrics",
     # sampling
     "SamplingParams", "GREEDY", "sample_logits",
     # submodules
-    "cache", "loader", "metrics", "sampling",
+    "cache", "faults", "loader", "metrics", "sampling",
 ]

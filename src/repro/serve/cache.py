@@ -70,9 +70,10 @@ class PoolExhausted(RuntimeError):
     """The page pool cannot cover a requested allocation.
 
     Raised by :meth:`PagedCachePool.alloc_pages`; the serving engine
-    catches it at admission time and leaves the request queued until
-    finished requests free pages — exhaustion is backpressure, not a
-    crash.
+    catches it. At admission time the request stays queued until finished
+    requests free pages; during incremental decode growth the engine
+    preempts its youngest slot and recomputes it later — either way,
+    exhaustion is backpressure, not a crash.
     """
 
 
@@ -222,12 +223,21 @@ class CachePool:
 
     * ``alloc_pages(slot, n_tokens)`` — ensure the slot can hold
       ``n_tokens`` cache positions; raises :class:`PoolExhausted`.
+      Idempotent and *incremental*: growing an already-populated slot
+      allocates only the missing pages, which is what the engine's
+      incremental admission mode leans on.
     * ``free(slot)`` — return the slot's resources for recycling.
     * ``gather_args()`` — extra traced arguments the decode/chunk steps
       need (the page table for a paged pool; nothing for dense).
+
+    ``faults`` optionally holds a :class:`repro.serve.faults.FaultInjector`
+    (duck-typed to avoid an import cycle); a paged pool consults it on
+    every real allocation attempt, so a seeded schedule can force
+    exhaustion even while free pages exist.
     """
 
     kind: str = "none"
+    faults = None                      # Optional[FaultInjector]
 
     def spec(self) -> Dict:
         raise NotImplementedError
@@ -306,11 +316,14 @@ class PagedCachePool(CachePool):
     ``num_pages`` counts *physical* pages including the trash page, so a
     pool holds ``(num_pages - 1) * page_size`` usable cache positions;
     the default matches a dense pool of the same ``slots``/``max_len``
-    plus the trash page. Allocation is eager per request (the engine
-    reserves ``ceil((n_front + prompt + max_new) / page_size)`` pages at
-    admission), which keeps the engine deadlock-free without a preemption
-    path; the win over dense is that the reservation tracks the
-    *request's* budget, not the engine-wide ``max_len``.
+    plus the trash page. The allocator itself is policy-free — it grows a
+    slot to any requested coverage and raises :class:`PoolExhausted` when
+    it cannot. The *engine* picks the reservation policy: eager admission
+    reserves ``ceil((n_front + prompt + max_new) / page_size)`` pages up
+    front (deadlock-free with no preemption path), incremental admission
+    reserves only the prompt's pages and grows per decode tick, preempting
+    on exhaustion. Either way the win over dense is that reservations
+    track the *request*, not the engine-wide ``max_len``.
 
     The free list is a FIFO deque: pages allocate in ascending id order
     from a fresh pool and recycle in the order they were freed —
@@ -364,6 +377,8 @@ class PagedCachePool(CachePool):
         need = self.pages_for(n_tokens) - len(owned)
         if need <= 0:
             return
+        if self.faults is not None:
+            self.faults.check("pool.alloc")
         if need > len(self._free):
             raise PoolExhausted(
                 f"pool has {len(self._free)} free pages, slot {slot} "
@@ -401,6 +416,11 @@ class PagedCachePool(CachePool):
     def free_list(self) -> Tuple[int, ...]:
         """Snapshot of the free list (allocation order) — test surface."""
         return tuple(self._free)
+
+    def slot_pages(self, slot: int) -> Tuple[int, ...]:
+        """Physical pages ``slot`` currently owns, in logical order — test
+        surface for incremental growth / preemption accounting."""
+        return tuple(self._owned[slot])
 
     # -- cache tree -----------------------------------------------------
 

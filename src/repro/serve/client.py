@@ -12,21 +12,59 @@ batching.
         futs = [client.submit(Request(prompt=p, max_new_tokens=16))
                 for p in prompts]
         results = [f.result(timeout=60) for f in futs]
+
+Liveness: with ``tick_timeout`` set, a :class:`repro.runtime.
+fault_tolerance.HeartbeatMonitor` watches the driver thread — every loop
+iteration pings it, so a *wedged tick* (``engine.step()`` stuck in a hung
+device call) goes silent and the watchdog fires within ``tick_timeout``
+seconds: outstanding futures fail with :class:`EngineWedged` instead of
+hanging until their ``result()`` timeouts, and further submissions are
+refused. Detection, not recovery — the wedged thread itself cannot be
+killed from Python; the point is that callers *find out*.
 """
 
 from __future__ import annotations
 
 import threading
 from concurrent.futures import Future
+from typing import Optional
 
+from repro.runtime.fault_tolerance import HeartbeatMonitor
 from repro.serve.engine import Request, ServeEngine
+
+#: the heartbeat worker name the driver thread pings
+_DRIVER = "serve-driver"
+
+
+class EngineWedged(RuntimeError):
+    """The driver thread stopped ticking (a hung ``engine.step()``): the
+    heartbeat watchdog failed all outstanding futures and closed the
+    client to new submissions. Distinct from a tick that *raises* (futures
+    get the real exception) — this is the tick that never returns."""
+
+    def __init__(self, timeout: float):
+        super().__init__(
+            f"serve driver thread missed its heartbeat for more than "
+            f"{timeout:.3f}s — a tick is wedged; outstanding requests "
+            f"were failed and the client is closed")
+        self.timeout = timeout
 
 
 class ServeClient:
-    """Async facade over a :class:`ServeEngine` (one driver thread)."""
+    """Async facade over a :class:`ServeEngine` (one driver thread).
 
-    def __init__(self, engine: ServeEngine):
+    ``tick_timeout`` (seconds, ``None`` = no watchdog) arms the heartbeat
+    monitor described in the module docstring. It bounds one *loop
+    iteration* — a tick plus the idle park (50 ms) — so set it comfortably
+    above the slowest expected tick (compile ticks included), not above
+    the whole request latency.
+    """
+
+    def __init__(self, engine: ServeEngine,
+                 tick_timeout: Optional[float] = None):
         self.engine = engine
+        self.tick_timeout = tick_timeout
+        self.wedged = False
         self._wake = threading.Event()
         self._stop = threading.Event()
         # serializes submit's stop-check+enqueue against the driver's
@@ -34,6 +72,15 @@ class ServeClient:
         # before the sweep (and gets failed by it) or observes the stop
         # flag and raises — never a silently stranded future
         self._lock = threading.Lock()
+        self._hb: Optional[HeartbeatMonitor] = None
+        if tick_timeout is not None:
+            if tick_timeout <= 0:
+                raise ValueError(f"tick_timeout must be positive or None, "
+                                 f"got {tick_timeout}")
+            self._hb = HeartbeatMonitor(
+                [_DRIVER], timeout=tick_timeout,
+                on_failure=self._on_wedged,
+                poll=min(0.05, tick_timeout / 4))
         self._thread = threading.Thread(target=self._drive,
                                         name="serve-engine", daemon=True)
         self._thread.start()
@@ -46,11 +93,25 @@ class ServeClient:
         migration ``TypeError`` for the removed positional form."""
         with self._lock:
             if self._stop.is_set():
-                raise RuntimeError("client is closed")
+                raise RuntimeError(
+                    "client is wedged" if self.wedged else
+                    "client is closed")
             fut = self.engine.submit(request, *legacy_args,
                                      **legacy_kwargs)
         self._wake.set()
         return fut
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or in-flight request by rid (thread-safe).
+
+        Returns whether the engine currently knows the rid; when it does,
+        the request's future resolves with
+        :class:`~repro.serve.engine.RequestCancelled` at the next tick
+        boundary and its slot + pages free immediately there."""
+        known = self.engine.cancel(rid)
+        if known:
+            self._wake.set()
+        return known
 
     def close(self, timeout: float = 60.0) -> None:
         """Stop the driver thread after the engine drains its current
@@ -58,6 +119,8 @@ class ServeClient:
         self._stop.set()
         self._wake.set()
         self._thread.join(timeout=timeout)
+        if self._hb is not None:
+            self._hb.close()
 
     def __enter__(self) -> "ServeClient":
         return self
@@ -66,11 +129,34 @@ class ServeClient:
         self.close()
         return False
 
+    # -- watchdog ------------------------------------------------------
+
+    def _on_wedged(self, worker: str) -> None:
+        """Heartbeat callback (watchdog thread): the driver went silent.
+
+        Best-effort crash surfacing — the wedged thread may sit inside a
+        hung tick holding partial slot state, so the engine is NOT safe to
+        reuse afterwards; what matters is that every outstanding future
+        resolves with :class:`EngineWedged` instead of hanging, and that
+        ``submit()`` refuses new work."""
+        self.wedged = True
+        self._stop.set()
+        self._wake.set()
+        with self._lock:
+            if self.engine.has_work():
+                self.engine.abort_all(EngineWedged(self.tick_timeout))
+
     # -- driver --------------------------------------------------------
 
     def _drive(self) -> None:
         exc: BaseException = RuntimeError("client is closed")
         while True:
+            if self._hb is not None:
+                self._hb.ping(_DRIVER)
+            if self._stop.is_set() and self.wedged:
+                # watchdog declared us wedged while we were merely slow:
+                # it already swept the futures; just exit
+                return
             if self.engine.has_work():
                 try:
                     self.engine.step()

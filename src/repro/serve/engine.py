@@ -7,15 +7,28 @@ with sequential-state blocks fall back to dense automatically) — and runs
 a strict tick loop:
 
   1. **Admit** — while a slot is free and requests are queued, pop one and
-     *reserve its full token budget* in the cache pool
-     (``alloc_pages(slot, n_front + prompt + max_new)``). A paged pool
-     that cannot cover the reservation raises
-     :class:`~repro.serve.cache.PoolExhausted`; the engine leaves the
-     request queued and retries after finished requests free pages —
-     exhaustion is backpressure, never a crash. Eager whole-budget
-     reservation keeps admission deadlock-free with no preemption path;
-     the capacity win over dense comes from reserving the *request's*
-     budget instead of a worst-case ``max_len`` row.
+     reserve pages for it. Under ``admission="eager"`` (the PR-6 policy,
+     kept for bisection) the reservation is the request's *full* token
+     budget (``alloc_pages(slot, n_front + prompt + max_new)``) —
+     deadlock-free with no preemption path. Under
+     ``admission="incremental"`` (vLLM's actual policy) only the prompt's
+     pages are reserved; the decode budget is allocated page-by-page as
+     the slot actually decodes (step 2b), so slots whose requests *could
+     not all co-reside at full budget* still run concurrently. Either
+     way a pool that cannot cover the reservation raises
+     :class:`~repro.serve.cache.PoolExhausted` and the engine leaves the
+     request queued, retrying after pages free — exhaustion is
+     backpressure, never a crash.
+  2b. **Grow / preempt** (incremental admission only) — before the compute
+     ticks, every live slot's page table is grown to cover this tick's
+     writes (the next decode position; ``+1`` for a prompt whose final
+     chunk lands this tick), oldest slot first. When the pool exhausts
+     mid-growth the engine *preempts its youngest slot*: frees its pages,
+     re-queues the request at the queue head with its already-generated
+     tokens appended to the prompt, and recomputes the whole prefix via
+     the ordinary chunked-prefill path on re-admission. Greedy decoding
+     is deterministic, so the resumed request's output is token-identical
+     to the never-preempted run (CI-gated in ``tests/test_serve.py``).
   2. **Chunked prefill** (paged, full-attention archs) — admitted prompts
      are processed as fixed-size chunks (``prefill_chunk`` tokens) through
      ONE compiled pool-wide step (:func:`repro.train.steps.
@@ -36,6 +49,15 @@ Requests are frozen :class:`Request` values — ``submit()`` takes exactly
 one of them; the pre-paging positional ``submit(prompt, max_new_tokens=…)``
 shape raises ``TypeError`` with the migration spelled out (repo policy
 post-PR 5: renamed surfaces break loudly, no loose-kwarg shims).
+
+Request lifecycle failures are *typed*, so callers can tell load-shedding
+from bugs: :class:`QueueFull` (bounded admission queue, raised at
+``submit``), :class:`DeadlineExceeded` (per-request ``deadline_ticks`` /
+``deadline_s`` blown — queued or mid-decode, the slot and its pages free
+immediately), :class:`RequestCancelled` (``cancel(rid)``), and the pool's
+:class:`~repro.serve.cache.PoolExhausted` (internal backpressure, never
+surfaced to a future). A :class:`repro.serve.faults.FaultInjector` passed
+as ``faults=`` forces these paths on a seeded schedule.
 
 Compilation is explicit: every jitted function lives in a
 :class:`CompileCache` keyed on ``(kind, arch, shape/bucket, pool kind,
@@ -122,6 +144,35 @@ class CompileCache:
         return list(self._fns)
 
 
+class QueueFull(RuntimeError):
+    """The bounded admission queue shed this submit (``queue_limit``
+    queued requests already waiting). Typed so a client can distinguish
+    load-shedding (retry later, against another replica) from a bug."""
+
+    def __init__(self, limit: int):
+        super().__init__(
+            f"admission queue full ({limit} requests waiting); retry "
+            f"later or raise queue_limit")
+        self.limit = limit
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request blew its ``deadline_ticks``/``deadline_s`` budget —
+    queued or mid-decode — and was dropped, its slot and pages freed."""
+
+    def __init__(self, rid: int, reason: str):
+        super().__init__(f"request {rid} deadline exceeded: {reason}")
+        self.rid = rid
+
+
+class RequestCancelled(RuntimeError):
+    """The request was cancelled via ``cancel(rid)`` before finishing."""
+
+    def __init__(self, rid: int):
+        super().__init__(f"request {rid} cancelled")
+        self.rid = rid
+
+
 _SUBMIT_MIGRATION = (
     "takes a single repro.serve.Request — the positional "
     "submit(prompt, max_new_tokens=..., stop_token=..., extras=...) form "
@@ -141,6 +192,13 @@ class Request:
     rejected loudly rather than silently ignored. ``rid=None`` lets the
     engine assign its sequence number; an explicit rid must be unique
     among live requests.
+
+    Deadlines are measured from submission: ``deadline_ticks`` in the
+    deterministic engine-tick clock (what tests assert against),
+    ``deadline_s`` in wall seconds (what an operator's SLO means). A
+    request past either resolves its future with
+    :class:`DeadlineExceeded`, freeing its slot and pages — a stuck or
+    abandoned caller can no longer hold capacity forever.
     """
 
     prompt: Tuple[int, ...]
@@ -149,6 +207,8 @@ class Request:
     stop_token: Optional[int] = None
     extras: Optional[Mapping] = None       # frontend_embeds / frames
     rid: Optional[int] = None
+    deadline_ticks: Optional[int] = None   # engine ticks after submit
+    deadline_s: Optional[float] = None     # wall seconds after submit
 
     def __post_init__(self):
         prompt = tuple(int(t) for t in
@@ -159,6 +219,10 @@ class Request:
         if self.max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got "
                              f"{self.max_new_tokens}")
+        for name in ("deadline_ticks", "deadline_s"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
 
 
 @dataclass
@@ -173,21 +237,36 @@ class GenerationResult:
 
 @dataclass
 class _Slot:
-    """Host-side state of one occupied decode lane."""
+    """Host-side state of one occupied decode lane (or queued request).
+
+    ``prompt`` is the *original* prompt the result reports;
+    ``prefill_seq`` is what the next admission actually prefills — equal
+    to ``prompt`` on first admission, ``prompt + tokens generated so
+    far`` after a preemption (the recompute path). ``tokens`` survives
+    preemption, so the resumed run appends where the kicked run stopped.
+    """
 
     req: Request
     rid: int
     future: Future
     prompt: np.ndarray
+    prefill_seq: np.ndarray = None         # defaults to prompt (submit)
     tokens: List[int] = field(default_factory=list)
     cur_pos: int = 0                       # absolute cache write position
     last_token: int = -1
-    prefilled: int = -1                    # prompt tokens chunk-prefilled
-    #                                        so far; -1 = not in chunk phase
+    prefilled: int = -1                    # prefill_seq tokens chunk-
+    #                                        prefilled so far; -1 = not in
+    #                                        chunk phase
+    admit_seq: int = -1                    # admission order; youngest =
+    #                                        highest = preemption victim
+
+    def __post_init__(self):
+        if self.prefill_seq is None:
+            self.prefill_seq = self.prompt
 
     @property
     def prefilling(self) -> bool:
-        return 0 <= self.prefilled < self.prompt.size
+        return 0 <= self.prefilled < self.prefill_seq.size
 
     @property
     def decoding(self) -> bool:
@@ -210,6 +289,19 @@ class ServeEngine:
       whole-bucket path even on a paged pool).
     * ``sampling`` — engine-wide :class:`SamplingParams` (a trace-time
       constant of the serve step; greedy by default).
+    * ``admission`` — page reservation policy: ``"eager"`` (default; the
+      PR-6 whole-budget reservation, deadlock-free, no preemption) or
+      ``"incremental"`` (prompt-only reservation + per-tick decode growth
+      + preempt-youngest/recompute on exhaustion — vLLM's policy; needs
+      the paged pool with chunked prefill, since recompute rides the
+      chunked-prefill path).
+    * ``queue_limit`` — bounded admission queue: a submit arriving while
+      ``queue_limit`` requests already wait raises :class:`QueueFull`
+      instead of growing the queue unboundedly. ``None`` = unbounded.
+    * ``faults`` — optional :class:`repro.serve.faults.FaultInjector`;
+      threaded into the page pool (``pool.alloc``) and the tick loop
+      (``engine.tick``) so tests drive every recovery path on a seeded,
+      reproducible schedule.
     * ``context`` — execution policy; resolved once here, exactly like the
       ``Trainer`` (explicit > ambient > ``cfg.butterfly`` > env/platform).
     * ``scrub_freed_slots`` — re-init a slot's cache state when its request
@@ -221,10 +313,19 @@ class ServeEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = 16,
                  sampling: sampling_lib.SamplingParams = sampling_lib.GREEDY,
+                 admission: str = "eager",
+                 queue_limit: Optional[int] = None,
+                 faults=None,
                  context: exctx.ContextLike = None, seed: int = 0,
                  min_bucket: int = 8, scrub_freed_slots: bool = False):
         if slots < 1:
             raise ValueError(f"need at least one slot, got {slots}")
+        if admission not in ("eager", "incremental"):
+            raise ValueError(f"unknown admission policy {admission!r}: "
+                             f"expected 'eager' or 'incremental'")
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError(f"queue_limit must be >= 1 or None, got "
+                             f"{queue_limit}")
         self.cfg = cfg
         self.slots = slots
         self.max_len = int(max_len)
@@ -248,11 +349,25 @@ class ServeEngine:
             int(prefill_chunk)
             if (prefill_chunk and self.pool.kind == "paged"
                 and cache_lib.chunked_prefill_supported(cfg)) else None)
+        self.admission = admission
+        if admission == "incremental" and (
+                self.pool.kind != "paged" or self.prefill_chunk is None):
+            raise ValueError(
+                "admission='incremental' needs the paged pool with chunked "
+                "prefill (preempted requests recompute through the chunk "
+                f"path); this engine resolved pool={self.pool.kind!r}, "
+                f"prefill_chunk={self.prefill_chunk!r} — use "
+                "admission='eager' for this arch/pool")
+        self.queue_limit = queue_limit
+        self.faults = faults
+        self.pool.faults = faults
         self._caches = self.pool.init()
         self._slots: List[Optional[_Slot]] = [None] * slots
         self._queue: collections.deque = collections.deque()
         self._lock = threading.Lock()
         self._next_rid = 0
+        self._admit_seq = 0
+        self._cancels: set = set()
         self._key = jax.random.PRNGKey(seed)
         self.compile_cache = CompileCache()
         self.metrics = self._fresh_metrics()
@@ -262,6 +377,7 @@ class ServeEngine:
     def _fresh_metrics(self, history: int = 1024) -> EngineMetrics:
         return EngineMetrics(slots=self.slots, max_request_history=history,
                              pool_kind=self.pool.kind,
+                             admission=self.admission,
                              total_pages=self.pool.total_pages)
 
     # -- execution scope ----------------------------------------------
@@ -388,6 +504,12 @@ class ServeEngine:
                     f"{usable} usable pages — it could never be admitted "
                     f"(raise num_pages or lower the request budget)")
         with self._lock:
+            if (self.queue_limit is not None
+                    and len(self._queue) >= self.queue_limit):
+                # bounded queue: shed load with a typed error the caller
+                # can retry on, instead of queueing unboundedly
+                self.metrics.on_queue_full()
+                raise QueueFull(self.queue_limit)
             if request.rid is None:
                 rid = self._next_rid
             else:
@@ -418,6 +540,7 @@ class ServeEngine:
         with self._lock:
             dead = list(self._queue)
             self._queue.clear()
+            self._cancels.clear()
         for i, s in enumerate(self._slots):
             if s is not None:
                 self._slots[i] = None
@@ -428,6 +551,27 @@ class ServeEngine:
             self.metrics.requests.pop(s.rid, None)
             if not s.future.done():
                 s.future.set_exception(exc)
+
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of a queued or in-flight request.
+
+        Thread-safe. Returns ``True`` when ``rid`` is currently queued or
+        occupying a slot; the cancellation is processed at the next tick
+        boundary (slot and pool state belong to the single driver
+        thread): the request's future resolves with
+        :class:`RequestCancelled` and its slot + pages free right there —
+        an abandoned request can no longer hold capacity. A rid that
+        finishes between this call and the boundary is a harmless no-op.
+        """
+        with self._lock:
+            known = any(s.rid == rid for s in self._queue)
+        known = known or any(s is not None and s.rid == rid
+                             for s in self._slots)
+        if not known:
+            return False
+        with self._lock:
+            self._cancels.add(rid)
+        return True
 
     def active_requests(self) -> List[int]:
         return [s.rid for s in self._slots if s is not None]
@@ -451,12 +595,23 @@ class ServeEngine:
     # -- the tick loop -------------------------------------------------
 
     def step(self) -> int:
-        """One engine tick: admit into free slots, advance chunked
-        prefills by one chunk, then one pooled decode. Returns the number
-        of slots still active after the tick."""
+        """One engine tick: process cancellations and deadlines, admit
+        into free slots, grow/preempt page tables (incremental
+        admission), advance chunked prefills by one chunk, then one
+        pooled decode. Returns the number of slots still active after
+        the tick."""
+        self._process_cancels()
+        self._expire_deadlines()
         self._admit()
         self.metrics.on_occupancy(
             sum(s is not None for s in self._slots))
+        if self.faults is not None:
+            # the mid-tick crash site: admissions landed, compute has not
+            # run — exactly where a device error would strand futures if
+            # the driver's abort path were broken
+            self.faults.check("engine.tick")
+        if self.admission == "incremental":
+            self._grow_pages()
         if self.prefill_chunk is not None:
             self._chunk_tick()
         if any(s is not None and s.decoding for s in self._slots):
@@ -492,8 +647,13 @@ class ServeEngine:
                 if not self._queue:
                     return
                 slot = self._queue[0]
-            budget = (self._n_front + slot.prompt.size
-                      + slot.req.max_new_tokens)
+            if self.admission == "incremental":
+                # prompt-only reservation; the decode budget grows page-
+                # by-page in _grow_pages as the slot actually decodes
+                budget = self._n_front + int(slot.prefill_seq.size)
+            else:
+                budget = (self._n_front + int(slot.prefill_seq.size)
+                          + slot.req.max_new_tokens)
             try:
                 self.pool.alloc_pages(idx, budget)
             except PoolExhausted:
@@ -508,6 +668,8 @@ class ServeEngine:
 
     def _admit_one(self, slot: _Slot, idx: int) -> None:
         self.metrics.on_admit(slot.rid)
+        slot.admit_seq = self._admit_seq
+        self._admit_seq += 1
         if self.prefill_chunk is not None:
             # chunked admission: no prefill work here — the chunk tick(s)
             # stream the prompt through the pool
@@ -548,6 +710,142 @@ class ServeEngine:
         if self._finished(slot):
             self._finish(idx)
 
+    # -- lifecycle: cancel / deadline / preempt -------------------------
+
+    def _resolve_dead(self, dead: List[Tuple[_Slot, BaseException]],
+                      on_record: Callable[[int], None]) -> None:
+        """Shared tail of the cancel/deadline paths: evict the metrics
+        record and fail the future."""
+        for s, exc in dead:
+            on_record(s.rid)
+            if not s.future.done():
+                s.future.set_exception(exc)
+
+    def _process_cancels(self) -> None:
+        """Resolve every pending ``cancel(rid)``: queued requests leave
+        the queue, in-flight ones free their slot and pages immediately.
+        Unknown/already-finished rids are no-ops."""
+        with self._lock:
+            if not self._cancels:
+                return
+            rids, self._cancels = self._cancels, set()
+            hit = [s for s in self._queue if s.rid in rids]
+            for s in hit:
+                self._queue.remove(s)
+        for i, s in enumerate(self._slots):
+            if s is not None and s.rid in rids:
+                self._slots[i] = None
+                self.pool.free(i)
+                hit.append(s)
+        if hit:
+            self.metrics.sync_pool(self.pool)
+        self._resolve_dead([(s, RequestCancelled(s.rid)) for s in hit],
+                           self.metrics.on_cancel)
+
+    def _deadline_reason(self, slot: _Slot) -> Optional[str]:
+        req = slot.req
+        if req.deadline_ticks is None and req.deadline_s is None:
+            return None
+        rm = self.metrics.request(slot.rid)
+        if rm is None:
+            return None
+        if req.deadline_ticks is not None:
+            waited = self.metrics.ticks - rm.submit_tick
+            if waited >= req.deadline_ticks:
+                return (f"{waited} ticks since submit >= deadline_ticks="
+                        f"{req.deadline_ticks}")
+        if req.deadline_s is not None:
+            waited_s = self.metrics.clock() - rm.submit_t
+            if waited_s >= req.deadline_s:
+                return (f"{waited_s:.3f}s since submit >= deadline_s="
+                        f"{req.deadline_s}")
+        return None
+
+    def _expire_deadlines(self) -> None:
+        """Fail every queued or in-flight request past its deadline with
+        :class:`DeadlineExceeded`, freeing slots and pages — a stuck or
+        abandoned request cannot hold capacity forever."""
+        with self._lock:
+            expired = [(s, self._deadline_reason(s)) for s in self._queue]
+            expired = [(s, r) for s, r in expired if r is not None]
+            for s, _ in expired:
+                self._queue.remove(s)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            r = self._deadline_reason(s)
+            if r is not None:
+                self._slots[i] = None
+                self.pool.free(i)
+                expired.append((s, r))
+        if expired:
+            self.metrics.sync_pool(self.pool)
+        self._resolve_dead(
+            [(s, DeadlineExceeded(s.rid, r)) for s, r in expired],
+            self.metrics.on_deadline)
+
+    def _preempt(self, idx: int) -> None:
+        """Kick slot ``idx`` for pages: free its pages and re-queue the
+        request at the queue head with its already-generated tokens
+        appended to the prompt. Re-admission recomputes the whole prefix
+        through the ordinary chunked-prefill path; greedy decoding makes
+        the resumed output token-identical to a never-preempted run."""
+        s = self._slots[idx]
+        self._slots[idx] = None
+        self.pool.free(idx)
+        computed = (s.prefilled if s.prefilling
+                    else int(s.prompt.size) + len(s.tokens))
+        if s.tokens:
+            s.prefill_seq = np.concatenate(
+                [s.prompt, np.asarray(s.tokens, np.int32)])
+        else:
+            s.prefill_seq = s.prompt
+        s.prefilled = -1
+        s.cur_pos = 0
+        s.last_token = -1
+        self.metrics.on_preempt(s.rid, computed)
+        with self._lock:
+            self._queue.appendleft(s)
+
+    def _grow_pages(self) -> None:
+        """Incremental admission: grow every live slot's page table to
+        cover this tick's cache writes, oldest slot first; on
+        :class:`PoolExhausted` preempt the *youngest* slot and retry.
+        Terminates: every preemption frees pages, the growing slot may
+        end up preempting itself, and ``submit()`` already rejected any
+        request whose full budget could never fit the pool."""
+        C = self.prefill_chunk
+        order = sorted(
+            (i for i, s in enumerate(self._slots) if s is not None),
+            key=lambda i: self._slots[i].admit_seq)
+        for i in order:
+            s = self._slots[i]
+            if s is None:                  # preempted as a younger victim
+                continue
+            if s.prefilling:
+                end = min(s.prefilled + C, int(s.prefill_seq.size))
+                need = self._n_front + end
+                if end == s.prefill_seq.size:
+                    # final chunk lands this tick: the slot joins this
+                    # very tick's decode, writing one position further
+                    need += 1
+            else:
+                need = s.cur_pos + 1       # this tick's decode write
+            while True:
+                try:
+                    self.pool.alloc_pages(i, need)
+                    break
+                except PoolExhausted:
+                    self.metrics.pool_exhausted_events += 1
+                    victim = max(
+                        (j for j, v in enumerate(self._slots)
+                         if v is not None),
+                        key=lambda j: self._slots[j].admit_seq)
+                    self._preempt(victim)
+                    if victim == i:
+                        break              # kicked ourselves; slot is gone
+        self.metrics.sync_pool(self.pool)
+
     def _chunk_tick(self) -> None:
         """Advance every prefilling slot by one prompt chunk (one pooled
         call). Slots whose final chunk lands sample their first token off
@@ -564,8 +862,8 @@ class ServeEngine:
         spans = {}
         for i, s in live:
             lo = s.prefilled
-            hi = min(lo + C, int(s.prompt.size))
-            tokens[i, :hi - lo] = s.prompt[lo:hi]
+            hi = min(lo + C, int(s.prefill_seq.size))
+            tokens[i, :hi - lo] = s.prefill_seq[lo:hi]
             start[i] = lo
             last[i] = hi - lo - 1
             active[i] = True
@@ -590,10 +888,15 @@ class ServeEngine:
                     logits[i:i + 1],
                     jax.random.fold_in(self._key, s.rid))[0])
             self.metrics.on_prefill_done()
-            self.metrics.on_first_token(s.rid)
-            s.tokens = [tok]
+            if s.tokens:
+                # resumed after preemption: the recomputed prefix already
+                # ends in generated tokens, so this is the NEXT token
+                self.metrics.on_token(s.rid)
+            else:
+                self.metrics.on_first_token(s.rid)
+            s.tokens.append(tok)
             s.last_token = tok
-            s.cur_pos = self._n_front + int(s.prompt.size)
+            s.cur_pos = self._n_front + int(s.prefill_seq.size)
             s.prefilled = -1                # decode phase
             if self._finished(s):
                 finishers.append(i)

@@ -35,6 +35,7 @@ class RequestMetrics:
     finish_t: float = 0.0
     finish_tick: int = -1
     new_tokens: int = 0
+    preemptions: int = 0             # times this request was kicked+requeued
 
     @property
     def ttft(self) -> float:
@@ -63,6 +64,7 @@ class RequestMetrics:
             "latency_ms": round(self.latency * 1e3, 3),
             "queue_ticks": self.admit_tick - self.submit_tick,
             "admit_tick": self.admit_tick, "finish_tick": self.finish_tick,
+            "preemptions": self.preemptions,
         }
 
 
@@ -103,10 +105,16 @@ class EngineMetrics:
     finished_tokens: int = 0         # lifetime total over finished requests
     max_concurrent_slots: int = 0    # high-water mark of occupied slots
     pool_kind: str = "dense"         # cache pool flavor ("dense"/"paged")
+    admission: str = "eager"         # page reservation policy
     total_pages: int = 0             # physical pages incl. the trash page
     pages_in_use: int = 0            # gauge, engine-synced after alloc/free
     pages_hwm: int = 0               # allocator high-water mark
-    pool_exhausted_events: int = 0   # admissions deferred for lack of pages
+    pool_exhausted_events: int = 0   # admissions/growth deferred or kicked
+    preempted: int = 0               # slots kicked mid-flight for pages
+    recompute_tokens: int = 0        # already-computed tokens re-prefilled
+    cancelled: int = 0               # requests cancelled by the client
+    rejected_queue_full: int = 0     # submits shed by the bounded queue
+    deadline_expired: int = 0        # requests failed on their deadline
     requests: Dict[int, RequestMetrics] = field(default_factory=dict)
     clock: object = time.monotonic
 
@@ -170,6 +178,30 @@ class EngineMetrics:
     def on_token(self, rid: int) -> None:
         self.requests[rid].new_tokens += 1
 
+    def on_preempt(self, rid: int, computed_tokens: int) -> None:
+        """A slot was kicked for pages; ``computed_tokens`` is the prefix
+        (prompt positions prefilled + tokens decoded) that must be
+        recomputed via chunked prefill on re-admission."""
+        self.preempted += 1
+        self.recompute_tokens += computed_tokens
+        rm = self.requests.get(rid)
+        if rm is not None:
+            rm.preemptions += 1
+
+    def on_cancel(self, rid: int) -> None:
+        """The request was cancelled: evict its record without entering the
+        finished history (it produced no result to aggregate)."""
+        self.cancelled += 1
+        self.requests.pop(rid, None)
+
+    def on_deadline(self, rid: int) -> None:
+        """The request blew its deadline: evict like a cancel."""
+        self.deadline_expired += 1
+        self.requests.pop(rid, None)
+
+    def on_queue_full(self) -> None:
+        self.rejected_queue_full += 1
+
     def on_finish(self, rid: int) -> RequestMetrics:
         """Finalize + evict a request's record (bounded-history move);
         returns it so the engine can attach it to the GenerationResult."""
@@ -205,12 +237,20 @@ class EngineMetrics:
             "prefill_tokens": self.prefill_tokens,
             "chunk_ticks": self.chunk_ticks,
             "max_concurrent_slots": self.max_concurrent_slots,
+            "cancelled": self.cancelled,
+            "rejected_queue_full": self.rejected_queue_full,
+            "deadline_expired": self.deadline_expired,
+            "preempted": self.preempted,
+            "recompute_tokens": self.recompute_tokens,
             "pool": {
                 "kind": self.pool_kind,
+                "admission": self.admission,
                 "total_pages": self.total_pages,
                 "pages_in_use": self.pages_in_use,
                 "pages_hwm": self.pages_hwm,
                 "exhausted_events": self.pool_exhausted_events,
+                "preempted": self.preempted,
+                "recompute_tokens": self.recompute_tokens,
             },
             "decode_steps": self.decode_steps,
             "decode_tokens": self.decode_tokens,

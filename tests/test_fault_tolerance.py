@@ -1,0 +1,141 @@
+"""`repro.runtime.fault_tolerance`: failure detection, elastic re-mesh
+planning, straggler mitigation — the control logic the serving client's
+watchdog (`tests/test_serve_faults.py`) builds on.
+
+These tests use generous timing margins (detection timeouts of 100s of ms
+against 10s-of-ms poll intervals) so they stay deterministic on loaded CI
+machines: they assert *ordering* (pinged workers stay alive, silent ones
+die, the callback fires exactly once) rather than precise latencies.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, MeshPlan,
+                                           StragglerMonitor,
+                                           plan_elastic_mesh)
+
+
+class TestHeartbeatMonitor:
+    def test_pinged_workers_stay_alive(self):
+        with HeartbeatMonitor(["a", "b"], timeout=0.3, poll=0.02) as hb:
+            for _ in range(10):
+                hb.ping("a")
+                hb.ping("b")
+                time.sleep(0.02)
+            assert hb.dead == []
+            assert hb.alive == ["a", "b"]
+
+    def test_silent_worker_dies_and_callback_fires_once(self):
+        failures = []
+        done = threading.Event()
+
+        def on_failure(w):
+            failures.append(w)
+            done.set()
+
+        with HeartbeatMonitor(["quiet", "loud"], timeout=0.15, poll=0.02,
+                              on_failure=on_failure) as hb:
+            t0 = time.monotonic()
+            # keep "loud" alive well past the timeout; never ping "quiet"
+            while time.monotonic() - t0 < 0.6:
+                hb.ping("loud")
+                time.sleep(0.02)
+            assert done.wait(timeout=2.0)
+            assert hb.dead == ["quiet"]
+            assert hb.alive == ["loud"]
+        # the callback fired exactly once despite many poll cycles past
+        # the deadline — death is latched
+        assert failures == ["quiet"]
+
+    def test_dead_worker_ping_does_not_resurrect(self):
+        with HeartbeatMonitor(["w"], timeout=0.1, poll=0.02) as hb:
+            deadline = time.monotonic() + 2.0
+            while hb.dead != ["w"] and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert hb.dead == ["w"]
+            hb.ping("w")                 # late ping from a zombie
+            time.sleep(0.1)
+            assert hb.dead == ["w"]
+
+    def test_close_is_idempotent_and_stops_the_watchdog(self):
+        hb = HeartbeatMonitor(["w"], timeout=10.0, poll=0.02)
+        hb.close()
+        hb.close()
+        assert not hb._thread.is_alive()
+
+
+class TestElasticMeshPlan:
+    def test_full_complement_uses_every_device(self):
+        plan = plan_elastic_mesh(8, model_parallelism=2, global_batch=32)
+        assert plan == MeshPlan(shape=(4, 2), axes=("data", "model"),
+                                dropped_devices=0)
+        assert plan.n_devices == 8
+
+    def test_survivor_loss_shrinks_data_axis_keeps_model(self):
+        plan = plan_elastic_mesh(6, model_parallelism=2, global_batch=32)
+        assert plan.shape[-1] == 2           # model axis untouched
+        assert plan.n_devices <= 6
+        assert plan.shape[0] * 2 + plan.dropped_devices == 6
+
+    def test_data_axis_must_divide_global_batch(self):
+        plan = plan_elastic_mesh(8, model_parallelism=1, global_batch=6)
+        assert 6 % plan.shape[0] == 0
+        assert plan.dropped_devices == 8 - plan.n_devices
+
+    def test_too_few_survivors_raises(self):
+        with pytest.raises(ValueError, match="survivors"):
+            plan_elastic_mesh(3, model_parallelism=4, global_batch=8)
+
+    def test_multi_pod_keeps_pod_axis(self):
+        plan = plan_elastic_mesh(8, model_parallelism=2, global_batch=32,
+                                 pods=2)
+        assert plan.axes == ("pod", "data", "model")
+        assert plan.shape[0] == 2
+
+
+class TestStragglerMonitor:
+    WORKERS = ["w0", "w1", "w2", "w3"]
+
+    def test_uniform_times_no_action(self):
+        mon = StragglerMonitor(self.WORKERS)
+        for _ in range(5):
+            act = mon.record({w: 1.0 for w in self.WORKERS})
+        assert act.kind == "none"
+
+    def test_transient_slowdown_rebalances_then_clears(self):
+        mon = StragglerMonitor(self.WORKERS, threshold=1.5, patience=3)
+        act = mon.record({"w0": 1.0, "w1": 1.0, "w2": 1.0, "w3": 4.0})
+        assert act.kind == "rebalance" and act.worker == "w3"
+        # the plan shifts work away from the straggler
+        assert act.microbatch_weights["w3"] == min(
+            act.microbatch_weights.values())
+        assert abs(sum(act.microbatch_weights.values()) - 1.0) < 1e-9
+        # recovery: EMA decays back under threshold -> flags reset
+        for _ in range(20):
+            act = mon.record({w: 1.0 for w in self.WORKERS})
+        assert act.kind == "none"
+        assert mon.flags["w3"] == 0
+
+    def test_persistent_straggler_evicted_after_patience(self):
+        mon = StragglerMonitor(self.WORKERS, threshold=1.5, patience=3)
+        kinds = []
+        for _ in range(6):
+            act = mon.record({"w0": 1.0, "w1": 1.0, "w2": 1.0, "w3": 10.0})
+            kinds.append(act.kind)
+        assert "evict" in kinds
+        first_evict = kinds.index("evict")
+        assert first_evict == 2              # patience=3 flagged steps
+        assert all(k == "rebalance" for k in kinds[:first_evict])
+        assert act.worker == "w3"
+
+    def test_ema_actually_smooths(self):
+        mon = StragglerMonitor(["a", "b"], alpha=0.3, threshold=1.5,
+                               patience=100)
+        for _ in range(10):
+            mon.record({"a": 1.0, "b": 1.0})
+        mon.record({"a": 1.0, "b": 100.0})   # one-step spike
+        # EMA after one spike: 0.3*100 + 0.7*1 ~ 30.7, not 100
+        assert 25.0 < mon.ema["b"] < 35.0

@@ -19,7 +19,12 @@ The acceptance properties of the engine:
     decode are exact);
 (d) **paged capacity** — at equal cache memory, a paged pool sustains
     strictly more concurrent slots than dense, and exhaustion defers
-    admission (backpressure) instead of crashing.
+    admission (backpressure) instead of crashing;
+(e) **preemptible incremental admission** — a request preempted mid-decode
+    (pages freed, requeued, prefix recomputed) resumes to greedy output
+    token-identical to the same request on an idle engine, and at equal
+    memory incremental admission co-runs a mixed trace that eager
+    admission must serialize.
 """
 
 import os
@@ -421,6 +426,83 @@ def test_pool_exhaustion_defers_admission(cfg, params):
     # a request that could NEVER fit is rejected at submit, not queued
     with pytest.raises(ValueError, match="pages"):
         eng.submit(_req(_prompt(rng, cfg, 40), max_new=2))
+
+
+# ---------------------------------------------------------------------------
+# (e) preemptible incremental admission: preempt/recompute parity, overload
+# ---------------------------------------------------------------------------
+
+def test_preempted_request_resumes_token_identical(cfg, params):
+    """The tentpole parity gate. Two 5-token prompts, 14 new tokens each,
+    on 4 usable 8-token pages: both full budgets (3 pages each) cannot
+    co-reside, so as decode grows page tables the younger request is
+    preempted — pages freed, request requeued with its generated prefix,
+    recomputed via chunked prefill. Greedy decoding makes the resumed
+    output token-identical to the single-request oracle (and hence to the
+    never-preempted run)."""
+    rng = np.random.default_rng(11)
+    prompts = [_prompt(rng, cfg, 5) for _ in range(2)]
+    want = [_oracle_generate(cfg, params, p, 14, 32) for p in prompts]
+
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, seed=0,
+                      pool="paged", page_size=8, num_pages=5,
+                      prefill_chunk=4, admission="incremental")
+    futs = [eng.submit(_req(p, max_new=14)) for p in prompts]
+    eng.run_until_idle()
+    results = [f.result(0) for f in futs]
+    for r, w in zip(results, want):
+        assert r.tokens == w
+    snap = eng.metrics.snapshot()
+    assert snap["preempted"] >= 1
+    assert snap["recompute_tokens"] > 0
+    assert sum(r.metrics.preemptions for r in results) == snap["preempted"]
+    # the kick/recompute cycle leaked nothing: every page drained
+    assert eng.pool.pages_in_use == 0
+    assert len(eng.pool.free_list()) == eng.pool.total_pages - 1
+
+
+def test_incremental_admits_mixed_trace_eager_cannot(cfg, params):
+    """Equal-memory overload: a long request (3-page full budget) plus a
+    short one (2 pages) on 4 usable pages. Eager admission must reserve
+    whole budgets, so it can only serialize them (max 1 concurrent slot);
+    incremental reserves prompt-only pages and co-runs both (2 concurrent),
+    finishing the same trace with identical greedy tokens."""
+    rng = np.random.default_rng(12)
+    long_p, short_p = _prompt(rng, cfg, 5), _prompt(rng, cfg, 4)
+    want = [_oracle_generate(cfg, params, long_p, 14, 32),
+            _oracle_generate(cfg, params, short_p, 6, 32)]
+
+    def run(admission):
+        eng = ServeEngine(cfg, params, slots=2, max_len=32, seed=0,
+                          pool="paged", page_size=8, num_pages=5,
+                          prefill_chunk=4, admission=admission)
+        futs = [eng.submit(_req(long_p, max_new=14)),
+                eng.submit(_req(short_p, max_new=6))]
+        eng.run_until_idle()
+        return [f.result(0).tokens for f in futs], eng.metrics.snapshot()
+
+    eager_toks, eager = run("eager")
+    incr_toks, incr = run("incremental")
+    assert eager_toks == want and incr_toks == want
+    # eager cannot admit both concurrently (3 + 2 pages > 4 usable)...
+    assert eager["max_concurrent_slots"] == 1
+    assert eager["preempted"] == 0
+    # ...incremental co-runs them at the same memory
+    assert incr["max_concurrent_slots"] == 2
+    assert incr["pool"]["admission"] == "incremental"
+
+
+def test_incremental_requires_paged_chunked(cfg, params):
+    """The recompute path rides chunked prefill on the paged pool — any
+    other configuration is rejected loudly at construction."""
+    with pytest.raises(ValueError, match="incremental"):
+        ServeEngine(cfg, params, slots=2, max_len=32, pool="dense",
+                    admission="incremental")
+    with pytest.raises(ValueError, match="incremental"):
+        ServeEngine(cfg, params, slots=2, max_len=32, pool="paged",
+                    prefill_chunk=None, admission="incremental")
+    with pytest.raises(ValueError, match="admission"):
+        ServeEngine(cfg, params, slots=2, max_len=32, admission="lazy")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,393 @@
+"""Fault injection + request lifecycle robustness (`repro.serve.faults`).
+
+Every recovery path the serving stack claims is driven here on a
+deterministic schedule:
+
+* **seeded injection** — a `FaultInjector` replays bit-identically given
+  (seed, call sequence); explicit ordinals compose with Bernoulli rates;
+* **forced exhaustion** — injected `PoolExhausted` defers admission under
+  eager admission and drives preempt/recompute under incremental, with
+  greedy output identical to the un-faulted run either way;
+* **mid-tick crash** — an `engine.tick` fault propagates through the
+  `ServeClient` driver, failing every outstanding future with the real
+  `InjectedFault` instead of stranding them;
+* **wedged driver** — a tick that never *returns* is caught by the
+  heartbeat watchdog (`tick_timeout`): futures fail with `EngineWedged`;
+* **torn/corrupt checkpoints** — `tear_checkpoint` damages the newest
+  step the way a killed writer would; restore falls back to the older
+  valid one;
+* **deadlines / cancellation / bounded queue** — the typed lifecycle
+  failures (`DeadlineExceeded`, `RequestCancelled`, `QueueFull`) fire on
+  schedule, free slot+pages, and keep the engine serving.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointing import CheckpointManager
+from repro.configs import registry
+from repro.serve import (DeadlineExceeded, EngineWedged, FaultInjector,
+                         InjectedFault, PoolExhausted, QueueFull, Request,
+                         RequestCancelled, ServeClient, ServeEngine,
+                         loader)
+from repro.serve.faults import tear_checkpoint
+
+ARCH = "smollm-135m-smoke"
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return registry.get(ARCH)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return loader.init_params(cfg, seed=0)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 4)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _prompt(cfg, n=5, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# The injector itself
+# ---------------------------------------------------------------------------
+
+class TestFaultInjector:
+    def _fired_ordinals(self, inj, calls=200):
+        out = []
+        for i in range(1, calls + 1):
+            try:
+                inj.check("pool.alloc")
+            except PoolExhausted:
+                out.append(i)
+        return out
+
+    def test_same_seed_same_schedule(self):
+        a = self._fired_ordinals(FaultInjector(seed=7,
+                                               rates={"pool.alloc": 0.1}))
+        b = self._fired_ordinals(FaultInjector(seed=7,
+                                               rates={"pool.alloc": 0.1}))
+        assert a and a == b
+
+    def test_different_seed_different_schedule(self):
+        a = self._fired_ordinals(FaultInjector(seed=7,
+                                               rates={"pool.alloc": 0.1}))
+        b = self._fired_ordinals(FaultInjector(seed=8,
+                                               rates={"pool.alloc": 0.1}))
+        assert a != b
+
+    def test_explicit_ordinals_fire_exactly(self):
+        inj = FaultInjector(at={"engine.tick": (2, 5)})
+        fired = []
+        for i in range(1, 8):
+            try:
+                inj.check("engine.tick")
+            except InjectedFault as e:
+                assert e.site == "engine.tick" and e.ordinal == i
+                fired.append(i)
+        assert fired == [2, 5]
+        assert inj.summary() == {"engine.tick": {"calls": 7, "fired": 2}}
+
+    def test_ordinals_compose_with_rates_deterministically(self):
+        def run():
+            inj = FaultInjector(seed=3, rates={"pool.alloc": 0.05},
+                                at={"pool.alloc": (4,)})
+            return self._fired_ordinals(inj)
+        a, b = run(), run()
+        assert a == b and 4 in a
+
+    def test_unknown_site_and_bad_rate_raise(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultInjector(rates={"pool.allocate": 0.1})
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultInjector(at={"tick": (1,)})
+        with pytest.raises(ValueError, match=r"\[0, 1\]"):
+            FaultInjector(rates={"pool.alloc": 1.5})
+
+    def test_pool_alloc_raises_pool_exhausted_type(self):
+        inj = FaultInjector(at={"pool.alloc": (1,)})
+        with pytest.raises(PoolExhausted, match="injected"):
+            inj.check("pool.alloc")
+
+
+# ---------------------------------------------------------------------------
+# Injected exhaustion through the engine
+# ---------------------------------------------------------------------------
+
+class TestInjectedExhaustion:
+    def test_eager_defers_admission_same_output(self, cfg, params):
+        """A forced PoolExhausted at the 2nd allocation defers the 2nd
+        request's admission one tick (backpressure), then everything
+        completes with tokens identical to the un-faulted engine."""
+        def run(faults):
+            eng = _engine(cfg, params, faults=faults)
+            futs = [eng.submit(Request(prompt=_prompt(cfg, seed=s),
+                                       max_new_tokens=6))
+                    for s in (0, 1)]
+            eng.run_until_idle()
+            return [f.result().tokens for f in futs], eng
+
+        clean, _ = run(None)
+        inj = FaultInjector(at={"pool.alloc": (2,)})
+        faulted, eng = run(inj)
+        assert faulted == clean
+        assert inj.fired["pool.alloc"] == 1
+        assert eng.metrics.pool_exhausted_events >= 1
+        assert eng.metrics.snapshot()["preempted"] == 0  # eager never kicks
+
+    def test_incremental_forced_preemption_token_parity(self, cfg, params):
+        """A forced PoolExhausted during incremental growth preempts the
+        (only, hence youngest) slot mid-decode; the recompute path resumes
+        it to greedy tokens identical to the un-faulted run."""
+        def run(faults):
+            eng = _engine(cfg, params, admission="incremental",
+                          num_pages=9, faults=faults)
+            fut = eng.submit(Request(prompt=_prompt(cfg), max_new_tokens=10))
+            eng.run_until_idle()
+            return fut.result(), eng
+
+        clean, _ = run(None)
+        # call 1 = prompt reservation at admission; call 2 = the first
+        # decode-growth allocation -> fires mid-decode
+        faulted, eng = run(FaultInjector(at={"pool.alloc": (2,)}))
+        assert faulted.tokens == clean.tokens
+        snap = eng.metrics.snapshot()
+        assert snap["preempted"] == 1
+        assert snap["recompute_tokens"] > 0
+        assert faulted.metrics.preemptions == 1
+        # the pool fully drained: no leaked pages after the kick/resume
+        assert snap["pool"]["pages_in_use"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Mid-tick crash through the client
+# ---------------------------------------------------------------------------
+
+class TestMidTickCrash:
+    def test_driver_fails_futures_and_refuses_submits(self, cfg, params):
+        eng = _engine(cfg, params,
+                      faults=FaultInjector(at={"engine.tick": (1,)}))
+        with ServeClient(eng) as client:
+            fut = client.submit(Request(prompt=_prompt(cfg),
+                                        max_new_tokens=4))
+            with pytest.raises(InjectedFault) as ei:
+                fut.result(timeout=60)
+            assert ei.value.site == "engine.tick"
+            # the driver is dead: further submissions are refused loudly
+            deadline = time.monotonic() + 5
+            while time.monotonic() < deadline:
+                try:
+                    client.submit(Request(prompt=_prompt(cfg)))
+                except RuntimeError:
+                    break
+                time.sleep(0.01)
+            else:
+                pytest.fail("submit kept succeeding after a dead driver")
+        # no request leaked into the slots
+        assert eng.active_requests() == []
+
+
+# ---------------------------------------------------------------------------
+# Wedged driver: the tick that never returns
+# ---------------------------------------------------------------------------
+
+class TestWedgedDriver:
+    def test_heartbeat_surfaces_wedged_tick(self, cfg, params):
+        eng = _engine(cfg, params)
+        release = threading.Event()
+        real_step = eng.step
+
+        def wedged_step():
+            release.wait(timeout=30)       # a hung device call
+            return real_step()
+
+        client = ServeClient(eng, tick_timeout=0.3)
+        try:
+            eng.step = wedged_step
+            fut = client.submit(Request(prompt=_prompt(cfg),
+                                        max_new_tokens=4))
+            with pytest.raises(EngineWedged):
+                fut.result(timeout=30)
+            assert client.wedged
+            with pytest.raises(RuntimeError, match="wedged"):
+                client.submit(Request(prompt=_prompt(cfg)))
+        finally:
+            release.set()
+            eng.step = real_step
+            client.close()
+
+    def test_healthy_driver_never_trips_watchdog(self, cfg, params):
+        eng = _engine(cfg, params)
+        with ServeClient(eng, tick_timeout=30.0) as client:
+            fut = client.submit(Request(prompt=_prompt(cfg),
+                                        max_new_tokens=4))
+            assert len(fut.result(timeout=120).tokens) == 4
+            assert not client.wedged
+
+    def test_tick_timeout_validation(self, cfg, params):
+        eng = _engine(cfg, params)
+        with pytest.raises(ValueError, match="tick_timeout"):
+            ServeClient(eng, tick_timeout=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Torn / corrupt checkpoints
+# ---------------------------------------------------------------------------
+
+class TestTornCheckpoint:
+    def _save_steps(self, cfg, params, directory, steps):
+        mgr = CheckpointManager(str(directory), keep=len(steps))
+        for s in steps:
+            mgr.save(s, {"params": params})
+        return mgr
+
+    def test_torn_newest_falls_back(self, cfg, params, tmp_path):
+        self._save_steps(cfg, params, tmp_path, (1, 2))
+        assert loader.restore_params(cfg, str(tmp_path))[0] == 2
+        damaged = tear_checkpoint(str(tmp_path), mode="torn")
+        assert damaged.endswith("step_000000002")
+        step, restored = loader.restore_params(cfg, str(tmp_path))
+        assert step == 1 and restored is not None
+
+    def test_corrupt_newest_falls_back(self, cfg, params, tmp_path):
+        self._save_steps(cfg, params, tmp_path, (1, 2))
+        tear_checkpoint(str(tmp_path), mode="corrupt")
+        step, restored = loader.restore_params(cfg, str(tmp_path))
+        assert step == 1 and restored is not None
+
+    def test_all_damaged_restores_nothing(self, cfg, params, tmp_path):
+        self._save_steps(cfg, params, tmp_path, (1,))
+        tear_checkpoint(str(tmp_path), mode="torn")
+        assert loader.restore_params(cfg, str(tmp_path)) == (None, None)
+
+    def test_validation(self, tmp_path):
+        with pytest.raises(FileNotFoundError, match="no step_"):
+            tear_checkpoint(str(tmp_path))
+        (tmp_path / "step_000000001").mkdir()
+        with pytest.raises(ValueError, match="unknown tear mode"):
+            tear_checkpoint(str(tmp_path), mode="shred")
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+class TestDeadlines:
+    def test_queued_request_expires_on_tick_deadline(self, cfg, params):
+        eng = _engine(cfg, params, slots=1)
+        f_long = eng.submit(Request(prompt=_prompt(cfg), max_new_tokens=20))
+        f_dead = eng.submit(Request(prompt=_prompt(cfg, seed=1),
+                                    max_new_tokens=4, deadline_ticks=3))
+        eng.run_until_idle()
+        assert len(f_long.result().tokens) == 20
+        with pytest.raises(DeadlineExceeded, match="deadline_ticks=3"):
+            f_dead.result()
+        assert eng.metrics.snapshot()["deadline_expired"] == 1
+
+    def test_in_flight_request_expires_and_frees_pages(self, cfg, params):
+        eng = _engine(cfg, params)
+        fut = eng.submit(Request(prompt=_prompt(cfg), max_new_tokens=20,
+                                 deadline_ticks=5))
+        eng.run_until_idle()
+        with pytest.raises(DeadlineExceeded):
+            fut.result()
+        assert eng.active_requests() == []
+        assert eng.metrics.pages_in_use == 0
+
+    def test_wall_deadline(self, cfg, params):
+        eng = _engine(cfg, params)
+        fut = eng.submit(Request(prompt=_prompt(cfg), max_new_tokens=4,
+                                 deadline_s=0.001))
+        time.sleep(0.01)                  # blow the SLO before any tick
+        eng.run_until_idle()
+        with pytest.raises(DeadlineExceeded, match="deadline_s"):
+            fut.result()
+
+    def test_generous_deadline_finishes_normally(self, cfg, params):
+        eng = _engine(cfg, params)
+        fut = eng.submit(Request(prompt=_prompt(cfg), max_new_tokens=4,
+                                 deadline_ticks=10_000, deadline_s=600.0))
+        eng.run_until_idle()
+        assert len(fut.result().tokens) == 4
+
+    def test_deadline_validation(self):
+        with pytest.raises(ValueError, match="deadline_ticks"):
+            Request(prompt=[1], deadline_ticks=0)
+        with pytest.raises(ValueError, match="deadline_s"):
+            Request(prompt=[1], deadline_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# Cancellation + bounded queue
+# ---------------------------------------------------------------------------
+
+class TestCancelAndQueue:
+    def test_cancel_queued_request(self, cfg, params):
+        eng = _engine(cfg, params, slots=1)
+        f_run = eng.submit(Request(prompt=_prompt(cfg), max_new_tokens=6))
+        f_cxl = eng.submit(Request(prompt=_prompt(cfg, seed=1),
+                                   max_new_tokens=6, rid=42))
+        assert eng.cancel(42) is True
+        eng.run_until_idle()
+        with pytest.raises(RequestCancelled, match="42"):
+            f_cxl.result()
+        assert len(f_run.result().tokens) == 6
+        assert eng.metrics.snapshot()["cancelled"] == 1
+
+    def test_cancel_in_flight_frees_slot_and_pages(self, cfg, params):
+        eng = _engine(cfg, params)
+        fut = eng.submit(Request(prompt=_prompt(cfg), max_new_tokens=20,
+                                 rid=7))
+        for _ in range(4):
+            eng.step()
+        assert 7 in eng.active_requests()
+        assert eng.cancel(7) is True
+        eng.run_until_idle()
+        with pytest.raises(RequestCancelled):
+            fut.result()
+        assert eng.active_requests() == []
+        assert eng.metrics.pages_in_use == 0
+
+    def test_cancel_unknown_rid_is_noop(self, cfg, params):
+        eng = _engine(cfg, params)
+        assert eng.cancel(12345) is False
+
+    def test_client_cancel_passthrough(self, cfg, params):
+        eng = _engine(cfg, params, slots=1)
+        with ServeClient(eng) as client:
+            f_run = client.submit(Request(prompt=_prompt(cfg),
+                                          max_new_tokens=6))
+            f_cxl = client.submit(Request(prompt=_prompt(cfg, seed=1),
+                                          max_new_tokens=6, rid=11))
+            assert client.cancel(11) is True
+            with pytest.raises(RequestCancelled):
+                f_cxl.result(timeout=120)
+            assert len(f_run.result(timeout=120).tokens) == 6
+
+    def test_queue_full_sheds_typed(self, cfg, params):
+        eng = _engine(cfg, params, queue_limit=2)
+        eng.submit(Request(prompt=_prompt(cfg), max_new_tokens=2))
+        eng.submit(Request(prompt=_prompt(cfg, seed=1), max_new_tokens=2))
+        with pytest.raises(QueueFull, match="2 requests waiting"):
+            eng.submit(Request(prompt=_prompt(cfg, seed=2),
+                               max_new_tokens=2))
+        assert eng.metrics.snapshot()["rejected_queue_full"] == 1
+        eng.run_until_idle()              # the queued two still complete
+        assert eng.metrics.requests_finished == 2
+
+    def test_queue_limit_validation(self, cfg, params):
+        with pytest.raises(ValueError, match="queue_limit"):
+            _engine(cfg, params, queue_limit=0)
