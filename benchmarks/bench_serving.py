@@ -24,6 +24,12 @@ the smoke arch and emits:
   derived column carries the lifecycle counters (``preempted``,
   ``recompute_tokens``, exhaustion events, concurrency high-water-mark)
   that the eager policy structurally cannot exercise;
+* ``serve/spec_decode`` — the same-size trace drained with draft-3-
+  verify-1 speculative decoding on the *butterfly-compressed* smoke arch
+  (the draft head is the model's own fixed-structure butterfly output
+  head); the derived column carries the acceptance rate and the gated
+  tokens-per-slot-tick figure, which must exceed 1 (asserted in-process —
+  greedy speculation is lossless, so the row is pure scheduling speed);
 * ``serve/large_pool`` — the 16-slot variant, emitted as *skipped* on CPU
   (one tick is minutes of wall clock at that batch) and timed on TPU.
 
@@ -72,15 +78,16 @@ def _drain(engine, prompts, max_new):
 
 def _run_engine(slots: int, requests: int, max_new: int, seed: int = 0,
                 pool: str = "dense", admission: str = "eager",
-                num_pages=None):
+                num_pages=None, arch: str = "smollm-135m-smoke",
+                spec_k: int = 0):
     from repro.configs import registry
     from repro.serve import ServeEngine, loader
 
-    cfg = registry.get("smollm-135m-smoke")
+    cfg = registry.get(arch)
     _, params = loader.load_for_serving(cfg, seed=0)
     engine = ServeEngine(cfg, params, slots=slots, max_len=96, pool=pool,
                          admission=admission, num_pages=num_pages,
-                         seed=seed)
+                         spec_k=spec_k, seed=seed)
     rng = np.random.default_rng(seed)
     # burn-in: one request per power-of-two bucket warms every dense
     # compile (the paged engine needs just one multi-chunk prompt — chunk
@@ -151,6 +158,31 @@ def run(requests: int = 24, max_new: int = 8) -> None:
         f"max_concurrent={snap['max_concurrent_slots']};"
         f"pages_hwm={snap['pool']['pages_hwm']};"
         f"p95_ttft_ms={snap['ttft_ms']['p95']};"
+        f"requests={snap['requests_finished']};"
+        f"tokens={snap['total_tokens']}")
+
+    # speculative decoding on the butterfly-compressed smoke arch: the
+    # draft head IS the model's own butterfly output head, so the row
+    # measures the paper's cheap-operator asymmetry doing real scheduling
+    # work. The gate: a decode tick must commit MORE than one token per
+    # occupied slot on average (greedy speculation is lossless, so this
+    # is pure speed) — assert it so the regression diff can't miss it.
+    snap, wall = _run_engine(slots=4, requests=requests, max_new=max_new,
+                             pool="paged", spec_k=3,
+                             arch="smollm-135m-butterfly-smoke")
+    tok_s = snap["decode_tok_per_s"]
+    sp = snap["spec"]
+    assert sp["tokens_per_slot_tick"] > 1.0, (
+        f"speculative decode must beat 1 token/slot-tick, got "
+        f"{sp['tokens_per_slot_tick']}")
+    common.emit(
+        "serve/spec_decode", wall * 1e6,
+        f"us_per_tok={1e6 / tok_s:.1f};tok_s={tok_s:.1f};"
+        f"tokens_per_slot_tick={sp['tokens_per_slot_tick']};"
+        f"acceptance_rate={sp['acceptance_rate']};"
+        f"spec_k={sp['k']};spec_ticks={sp['ticks']};"
+        f"draft_tokens={sp['draft_tokens']};"
+        f"accepted_draft_tokens={sp['accepted_draft_tokens']};"
         f"requests={snap['requests_finished']};"
         f"tokens={snap['total_tokens']}")
 

@@ -58,6 +58,12 @@ def main():
                          "admission (no preemption); incremental = prompt-"
                          "only + per-tick growth with preempt-youngest/"
                          "recompute on exhaustion")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens proposed per "
+                         "slot per tick through the model's own (butterfly) "
+                         "output head, verified in one batched full-model "
+                         "pass (0 = off; needs greedy sampling + paged "
+                         "pool + chunked prefill)")
     ap.add_argument("--queue-limit", type=int, default=0,
                     help="bounded admission queue: submits beyond this "
                          "many waiting requests are shed with QueueFull "
@@ -121,11 +127,13 @@ def main():
         prefill_chunk=args.prefill_chunk or None,
         sampling=SamplingParams(temperature=args.temperature,
                                 top_k=args.top_k, top_p=args.top_p),
-        admission=args.admission, queue_limit=args.queue_limit or None,
+        admission=args.admission, spec_k=args.spec_k,
+        queue_limit=args.queue_limit or None,
         faults=faults, context=context, seed=args.seed)
     print(f"[serve] {cfg.name} | params: {src} | slots={args.slots} "
           f"max_len={args.max_len} pool={engine.pool.kind} "
           f"chunk={engine.prefill_chunk} admission={engine.admission} "
+          f"spec_k={engine.spec_k} "
           f"sampling=(T={args.temperature}, "
           f"k={args.top_k}, p={args.top_p})"
           + (f" | mesh={engine.ctx.mesh_layout()}" if engine.mesh else ""))
@@ -183,6 +191,12 @@ def main():
           f"pool={snap['pool']['kind']} pages_hwm="
           f"{snap['pool']['pages_hwm']}/{snap['pool']['total_pages']} | "
           f"compiles={engine.compile_stats['compiles']}")
+    if snap["spec"]["k"]:
+        sp = snap["spec"]
+        print(f"[serve] speculative: k={sp['k']} "
+              f"acceptance={sp['acceptance_rate']:.3f} "
+              f"({sp['accepted_draft_tokens']}/{sp['draft_tokens']} drafts) "
+              f"tokens/slot-tick={sp['tokens_per_slot_tick']:.3f}")
     if (shed or snap["preempted"] or snap["cancelled"]
             or snap["deadline_expired"] or faults is not None):
         inj = (f" | faults={faults.summary()}" if faults is not None

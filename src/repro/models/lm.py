@@ -490,7 +490,7 @@ def decode_step(cfg: ModelConfig, params: Dict, token: jnp.ndarray,
 def prefill_chunk(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
                   caches: Dict, start_pos: jnp.ndarray,
                   last_idx: jnp.ndarray, page_table: jnp.ndarray
-                  ) -> Tuple[jnp.ndarray, Dict]:
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
     """Process one fixed-size prompt chunk through the paged decode path.
 
     ``tokens`` (B, C) are C consecutive prompt tokens per row, right-padded
@@ -506,6 +506,11 @@ def prefill_chunk(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
     (overwritten by decode before their positions become valid) or the
     trash page — the same inertness argument as bucketed
     :func:`prefill_at`.
+
+    Returns ``(logits (B, V), h_last (B, E), caches)``: ``h_last`` is the
+    *pre-final-norm* backbone state at ``last_idx`` — the residual-stream
+    anchor speculative decoding's draft state starts from (see
+    :func:`repro.train.steps.make_draft_step`).
     """
     x = cm.embed(cfg, params["embed"], tokens)
     B, C, _ = x.shape
@@ -515,6 +520,40 @@ def prefill_chunk(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
                             mode="decode", caches=caches, cur_pos=None,
                             page_table=page_table)
     x_last = x[jnp.arange(B), jnp.asarray(last_idx, jnp.int32)][:, None]
-    x_last = cm.rmsnorm(x_last, params["final_norm"], cfg.norm_eps)
-    logits = cm.head_apply(cfg, params["head"], params["embed"], x_last)
-    return logits[:, 0], caches
+    h = cm.rmsnorm(x_last, params["final_norm"], cfg.norm_eps)
+    logits = cm.head_apply(cfg, params["head"], params["embed"], h)
+    return logits[:, 0], x_last[:, 0], caches
+
+
+def verify_chunk(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray,
+                 caches: Dict, cur_pos: jnp.ndarray,
+                 page_table: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """Multi-position verify forward for speculative decoding.
+
+    ``tokens`` (B, K) is each row's last committed token followed by K-1
+    draft tokens, occupying absolute positions ``cur_pos .. cur_pos+K-1``.
+    One pass of the full model through the chunked-prefill decode path
+    (same causal/validity masking, same paged KV writes) yields the
+    logits at ALL K positions — unlike :func:`prefill_chunk`, which reads
+    out a single position — so the engine can compare each draft against
+    the model's own prediction one position earlier. Returns
+    ``(logits (B, K, V), x (B, K, E), caches)`` with ``x`` the
+    pre-final-norm backbone states (position ``j`` is the draft anchor
+    when the commit stops after input ``j``).
+
+    Rejected positions' KV writes are left in place: their positions sit
+    beyond the committed ``cur_pos``, so the validity mask (``kpos <=
+    q_pos``) keeps them inert, and the next verify pass overwrites them —
+    the same invariant that makes the trash page safe.
+    """
+    x = cm.embed(cfg, params["embed"], tokens)
+    B, K, _ = x.shape
+    cur_pos = jnp.asarray(cur_pos, jnp.int32)
+    positions = cur_pos[:, None] + jnp.arange(K)[None, :]
+    x, caches, _ = backbone(cfg, params, x, positions=positions,
+                            mode="decode", caches=caches, cur_pos=None,
+                            page_table=page_table)
+    h = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.head_apply(cfg, params["head"], params["embed"], h)
+    return logits, x, caches

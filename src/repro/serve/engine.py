@@ -44,6 +44,19 @@ a strict tick loop:
      to the trash page), per-slot active masks. Finished slots resolve
      their futures, free their pages for recycling, and the next tick's
      admission refills them — no stall, no re-batching barrier.
+  3b. **Speculative decode** (``spec_k > 0``, greedy + paged + chunked
+     prefill only) — draft-k-verify-1 replaces step 3: a near-free draft
+     (the model's own output head — a fixed-structure butterfly sandwich
+     on butterfly-compressed archs — over a residual-stream state
+     advanced by embedding feedback; :func:`repro.train.steps.
+     make_draft_step`) proposes ``spec_k`` tokens per slot, then ONE
+     batched pass of the full model verifies all positions
+     (:func:`repro.train.steps.make_spec_decode_step`) and each slot
+     commits its accepted prefix — 1 to ``spec_k + 1`` tokens per tick.
+     Rejected positions never advance ``cur_pos``, so their stale KV
+     writes stay inert under the validity mask (the same invariant the
+     trash page relies on), and greedy verification makes the committed
+     stream token-identical to non-speculative decoding (CI-gated).
 
 Requests are frozen :class:`Request` values — ``submit()`` takes exactly
 one of them; the pre-paging positional ``submit(prompt, max_new_tokens=…)``
@@ -259,6 +272,10 @@ class _Slot:
     #                                        chunk phase
     admit_seq: int = -1                    # admission order; youngest =
     #                                        highest = preemption victim
+    anchor: Optional[np.ndarray] = None    # (E,) pre-final-norm backbone
+    #                                        state at the last committed
+    #                                        input position — the draft
+    #                                        state seed (spec_k > 0)
 
     def __post_init__(self):
         if self.prefill_seq is None:
@@ -295,6 +312,15 @@ class ServeEngine:
       + preempt-youngest/recompute on exhaustion — vLLM's policy; needs
       the paged pool with chunked prefill, since recompute rides the
       chunked-prefill path).
+    * ``spec_k`` — speculative decoding: number of draft tokens proposed
+      per slot per tick (0 = off). Each decode tick drafts ``spec_k``
+      tokens through the model's own output head (butterfly on
+      butterfly-compressed archs), verifies all of them in ONE batched
+      full-model pass, and commits the accepted prefix — 1 to
+      ``spec_k + 1`` tokens per slot per tick. Requires greedy sampling
+      (exactly lossless — acceptance only affects speed) and the paged
+      pool with chunked prefill (the verify pass and the draft anchor
+      ride that machinery).
     * ``queue_limit`` — bounded admission queue: a submit arriving while
       ``queue_limit`` requests already wait raises :class:`QueueFull`
       instead of growing the queue unboundedly. ``None`` = unbounded.
@@ -313,7 +339,7 @@ class ServeEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = 16,
                  sampling: sampling_lib.SamplingParams = sampling_lib.GREEDY,
-                 admission: str = "eager",
+                 admission: str = "eager", spec_k: int = 0,
                  queue_limit: Optional[int] = None,
                  faults=None,
                  context: exctx.ContextLike = None, seed: int = 0,
@@ -358,6 +384,24 @@ class ServeEngine:
                 f"path); this engine resolved pool={self.pool.kind!r}, "
                 f"prefill_chunk={self.prefill_chunk!r} — use "
                 "admission='eager' for this arch/pool")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        self.spec_k = int(spec_k)
+        if self.spec_k:
+            if not sampling.greedy:
+                raise ValueError(
+                    "spec_k > 0 requires greedy sampling (temperature=0): "
+                    "speculative verification commits the model's argmax "
+                    "targets, which is only lossless under greedy — got "
+                    f"{sampling}")
+            if self.pool.kind != "paged" or self.prefill_chunk is None:
+                raise ValueError(
+                    "spec_k > 0 needs the paged pool with chunked prefill "
+                    "(the multi-position verify pass and the draft anchor "
+                    "ride the chunk machinery); this engine resolved "
+                    f"pool={self.pool.kind!r}, "
+                    f"prefill_chunk={self.prefill_chunk!r} — use spec_k=0 "
+                    "for this arch/pool")
         self.queue_limit = queue_limit
         self.faults = faults
         self.pool.faults = faults
@@ -378,7 +422,8 @@ class ServeEngine:
         return EngineMetrics(slots=self.slots, max_request_history=history,
                              pool_kind=self.pool.kind,
                              admission=self.admission,
-                             total_pages=self.pool.total_pages)
+                             total_pages=self.pool.total_pages,
+                             spec_k=self.spec_k)
 
     # -- execution scope ----------------------------------------------
 
@@ -430,6 +475,21 @@ class ServeEngine:
                     self.cfg, self._sample_fn,
                     paged=(self.pool.kind == "paged")),
                 donate_argnums=(2,))))
+
+    def _spec_verify_fn(self) -> Callable:
+        key = ("spec_verify", self.cfg.name, self.slots, self.spec_k,
+               self.ctx)
+        return self.compile_cache.get(key, lambda: (
+            self.compile_cache.counted_jit(
+                key, steps_lib.make_spec_decode_step(self.cfg, self.spec_k),
+                donate_argnums=(2,))))
+
+    def _draft_fn(self) -> Callable:
+        key = ("spec_draft", self.cfg.name, self.slots, self.spec_k,
+               self.ctx)
+        return self.compile_cache.get(key, lambda: (
+            self.compile_cache.counted_jit(
+                key, steps_lib.make_draft_step(self.cfg, self.spec_k))))
 
     def _insert_fn(self) -> Callable:
         key = ("insert", self.cfg.name, self.slots, self.pool.kind,
@@ -544,7 +604,7 @@ class ServeEngine:
         for i, s in enumerate(self._slots):
             if s is not None:
                 self._slots[i] = None
-                self.pool.free(i)
+                self._release_slot(i)
                 dead.append(s)
         self.metrics.sync_pool(self.pool)
         for s in dead:
@@ -680,12 +740,14 @@ class ServeEngine:
 
     def _admit_bucketed(self, slot: _Slot, idx: int) -> None:
         """Whole-prompt admission (dense pools and non-chunkable archs):
-        right-pad to a bucket, prefill at batch 1, splice into the pool."""
+        right-pad to a bucket, prefill at batch 1, splice into the pool.
+        Prefills ``prefill_seq`` (== ``prompt`` except after a preemption)
+        so a resumed slot recomputes its full prefix."""
         req = slot.req
-        plen = int(slot.prompt.size)
+        plen = int(slot.prefill_seq.size)
         bucket = self.bucket_for(plen)
         tokens = np.zeros((1, bucket), np.int32)
-        tokens[0, :plen] = slot.prompt
+        tokens[0, :plen] = slot.prefill_seq
         batch = {"tokens": jnp.asarray(tokens)}
         if req.extras:
             batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
@@ -701,9 +763,17 @@ class ServeEngine:
             tok = int(self._first_token_fn()(
                 logits, jax.random.fold_in(self._key, slot.rid))[0])
         self.metrics.on_prefill_work(plen, time.monotonic() - t0)
-        self.metrics.on_prefill_done()
-        self.metrics.on_first_token(slot.rid)
-        slot.tokens = [tok]
+        if slot.tokens:
+            # resumed after preemption: this prefill recomputed an
+            # already-counted prefix, and the sampled token is the NEXT
+            # one — bumping `prefills` or re-firing on_first_token here
+            # would inflate the prefill count and reset new_tokens/TTFT
+            self.metrics.on_token(slot.rid)
+            slot.tokens.append(tok)
+        else:
+            self.metrics.on_prefill_done()
+            self.metrics.on_first_token(slot.rid)
+            slot.tokens = [tok]
         slot.last_token = tok
         slot.cur_pos = self._n_front + plen
         self._slots[idx] = slot
@@ -735,7 +805,7 @@ class ServeEngine:
         for i, s in enumerate(self._slots):
             if s is not None and s.rid in rids:
                 self._slots[i] = None
-                self.pool.free(i)
+                self._release_slot(i)
                 hit.append(s)
         if hit:
             self.metrics.sync_pool(self.pool)
@@ -776,7 +846,7 @@ class ServeEngine:
             r = self._deadline_reason(s)
             if r is not None:
                 self._slots[i] = None
-                self.pool.free(i)
+                self._release_slot(i)
                 expired.append((s, r))
         if expired:
             self.metrics.sync_pool(self.pool)
@@ -792,7 +862,7 @@ class ServeEngine:
         the resumed output token-identical to a never-preempted run."""
         s = self._slots[idx]
         self._slots[idx] = None
-        self.pool.free(idx)
+        self._release_slot(idx)
         computed = (s.prefilled if s.prefilling
                     else int(s.prompt.size) + len(s.tokens))
         if s.tokens:
@@ -803,6 +873,7 @@ class ServeEngine:
         s.prefilled = -1
         s.cur_pos = 0
         s.last_token = -1
+        s.anchor = None          # recompute re-derives it (final chunk)
         self.metrics.on_preempt(s.rid, computed)
         with self._lock:
             self._queue.appendleft(s)
@@ -822,15 +893,23 @@ class ServeEngine:
             s = self._slots[i]
             if s is None:                  # preempted as a younger victim
                 continue
+            # under speculation a decode tick writes spec_k extra draft
+            # positions past the committed one; grow to cover them, but
+            # never past the request's own budget — overshoot beyond it
+            # routes to the trash page and needs no pages
+            budget = (self._n_front + int(s.prompt.size)
+                      + s.req.max_new_tokens)
             if s.prefilling:
                 end = min(s.prefilled + C, int(s.prefill_seq.size))
                 need = self._n_front + end
                 if end == s.prefill_seq.size:
                     # final chunk lands this tick: the slot joins this
                     # very tick's decode, writing one position further
-                    need += 1
+                    # (plus its draft positions when speculating)
+                    need = min(need + 1 + self.spec_k, budget)
             else:
-                need = s.cur_pos + 1       # this tick's decode write
+                # this tick's decode write (+ draft positions)
+                need = min(s.cur_pos + 1 + self.spec_k, budget)
             while True:
                 try:
                     self.pool.alloc_pages(i, need)
@@ -870,7 +949,7 @@ class ServeEngine:
             spans[i] = (lo, hi)
         t0 = time.monotonic()
         with self._scope():
-            logits, self._caches = self._chunk_fn()(
+            logits, h_last, self._caches = self._chunk_fn()(
                 self._params, jnp.asarray(tokens), self._caches,
                 jnp.asarray(start), jnp.asarray(last),
                 jnp.asarray(active), self.pool.gather_args()["page_table"])
@@ -878,6 +957,7 @@ class ServeEngine:
         self.metrics.on_prefill_work(real, time.monotonic() - t0,
                                      chunked=True)
         finishers = []
+        anchors = np.asarray(h_last) if self.spec_k else None
         for i, s in live:
             lo, hi = spans[i]
             s.prefilled = hi
@@ -887,17 +967,21 @@ class ServeEngine:
                 tok = int(self._first_token_fn()(
                     logits[i:i + 1],
                     jax.random.fold_in(self._key, s.rid))[0])
-            self.metrics.on_prefill_done()
             if s.tokens:
                 # resumed after preemption: the recomputed prefix already
-                # ends in generated tokens, so this is the NEXT token
+                # ends in generated tokens, so this is the NEXT token —
+                # and the request's one real prefill was already counted,
+                # so on_prefill_done would inflate `prefills`
                 self.metrics.on_token(s.rid)
             else:
+                self.metrics.on_prefill_done()
                 self.metrics.on_first_token(s.rid)
             s.tokens.append(tok)
             s.last_token = tok
             s.cur_pos = self._n_front + int(s.prefill_seq.size)
             s.prefilled = -1                # decode phase
+            if anchors is not None:
+                s.anchor = anchors[i]       # draft seed for this tick
             if self._finished(s):
                 finishers.append(i)
         for i in finishers:
@@ -909,25 +993,35 @@ class ServeEngine:
         stop = slot.req.stop_token
         return stop is not None and slot.last_token == stop
 
-    def _finish(self, idx: int) -> None:
-        slot = self._slots[idx]
-        self._slots[idx] = None
-        rm = self.metrics.on_finish(slot.rid)
+    def _release_slot(self, idx: int) -> None:
+        """The ONE scrub-then-free tail for every slot-exit path — finish,
+        cancel, deadline, preempt, abort. Under ``scrub_freed_slots`` the
+        slot's cache state is re-initialized BEFORE ``pool.free()``: after
+        free() the slot's page-table row points at trash, so a late scrub
+        would zero the trash page while the request's real KV survived in
+        recycled pages (the stale-KV scrub-bypass bug the lifecycle paths
+        used to have)."""
         if self.scrub_freed_slots:
-            # scrub BEFORE freeing so the slot's still-owned pages are the
-            # ones zeroed (after free() its table row points at trash)
             with self._scope():
                 reset_args = [self._caches, jnp.asarray(idx, jnp.int32)]
                 if self.pool.kind == "paged":
                     reset_args.append(self.pool.page_row(idx))
                 self._caches = self._reset_fn()(*reset_args)
         self.pool.free(idx)
+
+    def _finish(self, idx: int) -> None:
+        slot = self._slots[idx]
+        self._slots[idx] = None
+        rm = self.metrics.on_finish(slot.rid)
+        self._release_slot(idx)
         self.metrics.sync_pool(self.pool)
         slot.future.set_result(GenerationResult(
             rid=slot.rid, prompt=slot.prompt,
             tokens=list(slot.tokens), metrics=rm))
 
     def _decode_tick(self) -> None:
+        if self.spec_k:
+            return self._spec_decode_tick()
         tokens = np.zeros((self.slots,), np.int32)
         cur_pos = np.zeros((self.slots,), np.int32)
         active = np.zeros((self.slots,), bool)
@@ -957,5 +1051,67 @@ class ServeEngine:
             s.last_token = tok
             s.cur_pos += 1
             self.metrics.on_token(s.rid)
+            if self._finished(s):
+                self._finish(i)
+
+    def _spec_decode_tick(self) -> None:
+        """Draft-k-verify-1: propose ``spec_k`` tokens per slot off each
+        slot's residual-stream anchor, verify every position in ONE
+        batched full-model pass, commit each slot's accepted prefix.
+
+        The committed stream is the verify pass's own greedy targets —
+        position by position exactly what non-speculative decode would
+        have sampled — so acceptance only decides how many land per tick,
+        never which tokens. A commit truncated below the accepted length
+        (budget or stop token) always finishes the slot, so the verify
+        anchor (valid only for full commits) is never used stale.
+        """
+        live = [(i, s) for i, s in enumerate(self._slots)
+                if s is not None and s.decoding]
+        if not live:
+            return
+        K1 = self.spec_k + 1
+        tokens = np.zeros((self.slots, K1), np.int32)
+        cur_pos = np.zeros((self.slots,), np.int32)
+        active = np.zeros((self.slots,), bool)
+        anchors = np.zeros((self.slots, self.cfg.d_model), np.float32)
+        for i, s in live:
+            tokens[i, 0] = s.last_token
+            cur_pos[i] = s.cur_pos
+            active[i] = True
+            anchors[i] = s.anchor
+        t0 = time.monotonic()
+        with self._scope():
+            drafts = self._draft_fn()(self._params, jnp.asarray(anchors),
+                                      jnp.asarray(tokens[:, 0]))
+            tokens[:, 1:] = np.asarray(drafts)
+            targets, accepted, anchor_out, self._caches = \
+                self._spec_verify_fn()(
+                    self._params, jnp.asarray(tokens), self._caches,
+                    jnp.asarray(cur_pos), jnp.asarray(active),
+                    self.pool.gather_args()["page_table"])
+        targets = np.asarray(targets)
+        accepted = np.asarray(accepted)
+        anchor_out = np.asarray(anchor_out)
+        committed_total = 0
+        for i, s in live:
+            m = int(accepted[i]) + 1
+            m = min(m, s.req.max_new_tokens - len(s.tokens))
+            toks = [int(t) for t in targets[i, :m]]
+            stop = s.req.stop_token
+            if stop is not None and stop in toks:
+                toks = toks[:toks.index(stop) + 1]
+            s.tokens.extend(toks)
+            s.last_token = toks[-1]
+            s.cur_pos += len(toks)
+            s.anchor = anchor_out[i]
+            committed_total += len(toks)
+            self.metrics.on_token(s.rid, len(toks))
+        self.metrics.on_spec_tick(
+            drafted=len(live) * self.spec_k,
+            accepted=int(accepted[[i for i, _ in live]].sum()))
+        self.metrics.on_decode_tick(len(live), committed_total,
+                                    time.monotonic() - t0)
+        for i, s in live:
             if self._finished(s):
                 self._finish(i)

@@ -16,6 +16,7 @@ Two clocks run through every record:
 from __future__ import annotations
 
 import collections
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
@@ -69,12 +70,20 @@ class RequestMetrics:
 
 
 def _percentile(sorted_vals: List[float], q: float) -> float:
-    """Nearest-rank percentile on a pre-sorted list (no numpy dependency in
-    the snapshot path)."""
+    """Nearest-rank percentile on a pre-sorted list (no numpy dependency
+    in the snapshot path).
+
+    Explicit ceil-based nearest rank — the smallest value with at least a
+    ``q`` fraction of the sample at or below it: rank ``ceil(q * n)``
+    (1-based), clamped to the sample. Python's ``round()`` (banker's
+    rounding) picked the lower rank inconsistently on even-length
+    windows; the ceil convention is deterministic and standard (pinned by
+    unit tests over 1/2/3/20-element windows in ``tests/test_serve.py``).
+    """
     if not sorted_vals:
         return 0.0
-    idx = min(len(sorted_vals) - 1, max(0, round(q * (len(sorted_vals) - 1))))
-    return sorted_vals[idx]
+    rank = math.ceil(q * len(sorted_vals))
+    return sorted_vals[min(len(sorted_vals) - 1, max(0, rank - 1))]
 
 
 @dataclass
@@ -115,6 +124,10 @@ class EngineMetrics:
     cancelled: int = 0               # requests cancelled by the client
     rejected_queue_full: int = 0     # submits shed by the bounded queue
     deadline_expired: int = 0        # requests failed on their deadline
+    spec_k: int = 0                  # draft tokens proposed per slot tick
+    spec_ticks: int = 0              # speculative decode pool invocations
+    draft_tokens: int = 0            # Σ draft proposals over live slots
+    accepted_draft_tokens: int = 0   # Σ verified-accepted draft proposals
     requests: Dict[int, RequestMetrics] = field(default_factory=dict)
     clock: object = time.monotonic
 
@@ -175,8 +188,21 @@ class EngineMetrics:
         self.pages_in_use = pool.pages_in_use
         self.pages_hwm = pool.pages_hwm
 
-    def on_token(self, rid: int) -> None:
-        self.requests[rid].new_tokens += 1
+    def on_token(self, rid: int, n: int = 1) -> None:
+        """``n`` tokens committed to the request's output stream (n > 1
+        only under speculative decoding, where a tick can commit up to
+        ``spec_k + 1`` tokens per slot)."""
+        self.requests[rid].new_tokens += n
+
+    def on_spec_tick(self, drafted: int, accepted: int) -> None:
+        """One speculative decode tick: ``drafted`` proposals went into the
+        verify pass across live slots, ``accepted`` survived it. The bonus
+        token each slot gets from the verify logits themselves is *not* a
+        draft token and is excluded from both counters, so
+        ``acceptance_rate`` isolates draft-head quality."""
+        self.spec_ticks += 1
+        self.draft_tokens += drafted
+        self.accepted_draft_tokens += accepted
 
     def on_preempt(self, rid: int, computed_tokens: int) -> None:
         """A slot was kicked for pages; ``computed_tokens`` is the prefix
@@ -255,6 +281,17 @@ class EngineMetrics:
             "decode_steps": self.decode_steps,
             "decode_tokens": self.decode_tokens,
             "total_tokens": self.finished_tokens,
+            "spec": {
+                "k": self.spec_k,
+                "ticks": self.spec_ticks,
+                "draft_tokens": self.draft_tokens,
+                "accepted_draft_tokens": self.accepted_draft_tokens,
+                "acceptance_rate": round(
+                    self.accepted_draft_tokens / self.draft_tokens, 4)
+                    if self.draft_tokens else 0.0,
+                "tokens_per_slot_tick": round(
+                    self.decode_tokens / max(1, self.occupied_slot_ticks), 4),
+            },
             "decode_tok_per_s": (self.decode_tokens / self.decode_time_s
                                  if self.decode_time_s else 0.0),
             "slot_occupancy": round(occupancy, 4),

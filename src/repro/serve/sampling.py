@@ -25,7 +25,8 @@ class SamplingParams:
 
     * ``temperature`` — ``0.0`` = greedy argmax; ``> 0`` scales logits
       before sampling.
-    * ``top_k`` — ``0`` = disabled; else restrict to the k highest logits.
+    * ``top_k`` — ``0`` = disabled; else restrict to the k highest logits
+      (``k >= vocab`` keeps everything, i.e. behaves as disabled).
     * ``top_p`` — ``1.0`` = disabled; else nucleus sampling: keep the
       smallest prefix of the probability-sorted vocab whose mass reaches
       ``top_p`` (the first token is always kept).
@@ -66,7 +67,9 @@ def sample_logits(logits: jnp.ndarray, rng, params: SamplingParams
     if params.greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / params.temperature
-    if params.top_k:
+    # top_k >= V keeps the whole vocab — same as disabled. Clamp at trace
+    # time: jax.lax.top_k requires k <= V and would crash otherwise.
+    if params.top_k and params.top_k < logits.shape[-1]:
         kth = jax.lax.top_k(logits, params.top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, NEG_INF, logits)
     if params.top_p < 1.0:

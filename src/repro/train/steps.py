@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import common as cm
 from repro.models import lm
 from repro.optim import optimizer as opt
 from repro.optim.compression import compress_gradients
@@ -241,18 +242,98 @@ def make_chunk_prefill_step(cfg: ModelConfig) -> Callable:
     """Chunked prefill over the serving engine's slot pool (paged only).
 
     ``step(params, tokens, caches, start_pos, last_idx, active, page_table)
-    -> (logits, caches)``: ``tokens (S, C)`` is one fixed-size prompt chunk
-    per slot (zeros for slots with nothing to prefill this tick),
-    ``start_pos (S,)`` the chunk's absolute start position, ``last_idx
-    (S,)`` the within-chunk readout index (meaningful on a prompt's final
-    chunk). ONE compile covers every prompt length — the engine admits a
-    prompt as ``ceil(len / C)`` invocations interleaved with decode ticks.
-    Inactive lanes are redirected to the trash page exactly like the paged
-    decode tick.
+    -> (logits, h_last, caches)``: ``tokens (S, C)`` is one fixed-size
+    prompt chunk per slot (zeros for slots with nothing to prefill this
+    tick), ``start_pos (S,)`` the chunk's absolute start position,
+    ``last_idx (S,)`` the within-chunk readout index (meaningful on a
+    prompt's final chunk), ``h_last (S, E)`` the pre-final-norm backbone
+    state at that index (the speculative draft anchor). ONE compile covers
+    every prompt length — the engine admits a prompt as ``ceil(len / C)``
+    invocations interleaved with decode ticks. Inactive lanes are
+    redirected to the trash page exactly like the paged decode tick.
     """
     def step(params, tokens, caches, start_pos, last_idx, active,
              page_table):
         page_table = jnp.where(active[:, None], page_table, 0)
         return lm.prefill_chunk(cfg, params, tokens, caches, start_pos,
                                 last_idx, page_table)
+    return step
+
+
+def make_draft_step(cfg: ModelConfig, k: int) -> Callable:
+    """Draft proposer for draft-k-verify-1 speculative decoding.
+
+    ``draft(params, anchor, last_token) -> drafts (S, k)``: from each
+    slot's residual-stream anchor — the pre-final-norm backbone state at
+    its last committed input position (returned by
+    :func:`repro.models.lm.prefill_chunk` / :func:`~repro.models.lm.
+    verify_chunk`) — propose ``k`` greedy continuations WITHOUT running
+    the backbone. The draft state advances by embedding feedback alone
+    (``g <- g + embed(token)``, the same scaled embedding the real
+    residual stream starts from) and reads out through the model's OWN
+    output head. On butterfly-compressed archs (``cfg.butterfly.sites``
+    containing ``"lm_head"``) that head is the fixed-structure butterfly
+    sandwich the paper builds — at 142x–273x fewer parameters than dense
+    (``BENCH_quick.json`` ``params/*-head`` rows), i.e. the near-free
+    draft model already living inside the architecture. Draft quality
+    only affects speed, never output: greedy verification commits exactly
+    the tokens the full model would have produced.
+    """
+    if k < 1:
+        raise ValueError(f"draft step needs k >= 1, got {k}")
+
+    def draft(params, anchor, last_token):
+        g = anchor.astype(cfg.cdtype())
+        tok = jnp.asarray(last_token, jnp.int32)
+        out = []
+        for _ in range(k):                 # k is small; unrolled
+            g = g + cm.embed(cfg, params["embed"], tok[:, None])[:, 0]
+            h = cm.rmsnorm(g[:, None], params["final_norm"], cfg.norm_eps)
+            logits = cm.head_apply(cfg, params["head"], params["embed"], h)
+            tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+    return draft
+
+
+def make_spec_decode_step(cfg: ModelConfig, k: int) -> Callable:
+    """One speculative verify tick over a serving engine's slot pool.
+
+    ``step(params, tokens, caches, cur_pos, active, page_table) ->
+    (targets, accepted, anchor, caches)`` with ``tokens (S, k+1)`` each
+    slot's last committed token followed by its ``k`` draft tokens at
+    absolute positions ``cur_pos .. cur_pos+k``. ONE batched pass of the
+    full model (:func:`repro.models.lm.verify_chunk`) produces greedy
+    targets at every position; ``accepted (S,)`` is the per-slot length
+    of the leading draft prefix that matches them (``0..k``), so the host
+    commits ``accepted+1`` tokens ``targets[:, :accepted+1]`` and
+    advances ``cur_pos`` by exactly that — rejected positions never
+    advance ``cur_pos``, leaving their stale KV writes masked out.
+    ``anchor (S, E)`` is the pre-final-norm backbone state at the last
+    committed input position, seeding the next tick's draft state.
+
+    Greedy-only by construction (targets are argmax): with greedy
+    sampling the committed stream is token-identical to non-speculative
+    decoding, which is what the CI parity gate asserts. Inactive lanes
+    are trash-redirected and their outputs pinned to their inputs, like
+    the pooled decode step.
+    """
+    if k < 1:
+        raise ValueError(f"speculative decode needs k >= 1 drafts, got {k}")
+
+    def step(params, tokens, caches, cur_pos, active, page_table):
+        page_table = jnp.where(active[:, None], page_table, 0)
+        logits, x, caches = lm.verify_chunk(cfg, params, tokens, caches,
+                                            cur_pos, page_table)
+        targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # draft j+1 survives iff it equals the model's target at position j
+        # AND every earlier draft survived: leading-match prefix length
+        matches = targets[:, :-1] == tokens[:, 1:]
+        accepted = jnp.sum(jnp.cumprod(matches.astype(jnp.int32), axis=1),
+                           axis=1)
+        accepted = jnp.where(active, accepted, 0)
+        targets = jnp.where(active[:, None], targets, tokens)
+        S = tokens.shape[0]
+        anchor = x[jnp.arange(S), accepted]
+        return targets, accepted, anchor, caches
     return step

@@ -105,6 +105,19 @@ class TestSampling:
             np.asarray(sample_logits(logits, k, sp)) for k in keys])
         assert set(toks.tolist()) <= {2, 3}
 
+    def test_top_k_at_or_above_vocab_is_disabled(self):
+        """`top_k >= V` means "no restriction" — it must sample, not crash
+        (jax.lax.top_k requires k <= V), and match top_k=0 exactly."""
+        logits = jax.random.normal(jax.random.PRNGKey(4), (8, 4))
+        key = jax.random.PRNGKey(5)
+        for k in (4, 10):
+            got = sample_logits(logits, key,
+                                SamplingParams(temperature=1.0, top_k=k))
+            want = sample_logits(logits, key,
+                                 SamplingParams(temperature=1.0, top_k=0))
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
+
     def test_top_p_keeps_nucleus_only(self):
         # one dominant token: p=0.5 nucleus is exactly {3}
         logits = jnp.asarray([[0.0, 0.0, 0.0, 10.0]] * 32, jnp.float32)
@@ -308,6 +321,112 @@ def test_scrubbed_slots_do_not_change_outputs(cfg, params):
     eng.run_until_idle()
     for p, f in zip(prompts, futs):
         assert f.result(0).tokens == _oracle_generate(cfg, params, p, 5, 64)
+
+
+def _page_content(eng, pages):
+    """Concatenated flat content of physical ``pages`` across every paged
+    cache leaf of the engine's pool tree."""
+    import jax as _jax
+    P = eng.pool.total_pages
+    out = []
+    for leaf in _jax.tree_util.tree_leaves(eng._caches):
+        if leaf.ndim >= 2 and leaf.shape[0] == P:
+            out.append(np.asarray(leaf[list(pages)]).ravel())
+        elif leaf.ndim >= 3 and leaf.shape[1] == P:
+            out.append(np.asarray(leaf[:, list(pages)]).ravel())
+    assert out, "no paged leaves found"
+    return np.concatenate(out)
+
+
+@pytest.mark.parametrize("exit_path", ["cancel", "deadline", "preempt"])
+def test_lifecycle_exits_scrub_freed_pages(cfg, params, exit_path):
+    """Regression: cancel/deadline/preempt used to call ``pool.free``
+    WITHOUT the ``scrub_freed_slots`` re-init that ``_finish`` performs,
+    so a dead request's KV survived in recycled pages. All exits now run
+    the shared scrub-then-free tail: the freed pages read back zero."""
+    kw = dict(slots=1, max_len=64, seed=0, pool="paged",
+              scrub_freed_slots=True)
+    if exit_path == "preempt":
+        kw.update(admission="incremental")
+    eng = ServeEngine(cfg, params, **kw)
+    rng = np.random.default_rng(31)
+    fut = eng.submit(_req(_prompt(rng, cfg, 6), max_new=16,
+                          deadline_ticks=(4 if exit_path == "deadline"
+                                          else None)))
+    for _ in range(3):                     # prefill + a few decode ticks
+        eng.step()
+    pages = eng.pool.slot_pages(0)
+    assert pages and np.abs(_page_content(eng, pages)).max() > 0
+
+    if exit_path == "cancel":
+        rid = eng.active_requests()[0]
+        assert eng.cancel(rid)
+        eng.step()
+        with pytest.raises(Exception, match="cancelled"):
+            fut.result(0)
+    elif exit_path == "deadline":
+        while not fut.done():              # ticks reach deadline_ticks=4
+            eng.step()
+        with pytest.raises(Exception, match="deadline"):
+            fut.result(0)
+    else:
+        eng._preempt(0)                    # white-box: the page-kick path
+
+    assert eng.pool.slot_pages(0) == ()
+    assert np.abs(_page_content(eng, pages)).max() == 0, \
+        f"{exit_path} leaked KV content into recycled pages"
+    if exit_path == "preempt":             # resumed run still exact
+        eng.run_until_idle()
+        want = _oracle_generate(cfg, params, fut.result(0).prompt, 16, 64)
+        assert fut.result(0).tokens == want
+
+
+def test_preempt_resume_metrics_survive(cfg, params):
+    """Regression: a resumed (post-preemption) request's recompute used to
+    re-fire ``on_prefill_done`` (inflating ``prefills``) and would have
+    reset ``new_tokens``/TTFT through ``on_first_token`` on the bucketed
+    path. After a preempt-and-resume cycle every counter must reflect the
+    request's real life: one prefill each, every generated token counted
+    once, TTFT from the FIRST admission."""
+    rng = np.random.default_rng(32)
+    prompts = [_prompt(rng, cfg, 5) for _ in range(2)]
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, seed=0,
+                      pool="paged", page_size=8, num_pages=5,
+                      prefill_chunk=4, admission="incremental")
+    futs = [eng.submit(_req(p, max_new=14)) for p in prompts]
+    eng.run_until_idle()
+    results = [f.result(0) for f in futs]
+    snap = eng.metrics.snapshot()
+    assert snap["preempted"] >= 1          # the cycle actually happened
+    assert snap["prefills"] == 2           # recompute is NOT a new prefill
+    for r in results:
+        assert r.metrics.new_tokens == 14  # preserved across the cycle
+        assert len(r.tokens) == 14
+        assert r.metrics.ttft > 0
+        assert r.metrics.ttft <= r.metrics.latency
+
+
+def test_percentile_is_ceil_based_nearest_rank():
+    """Pin `_percentile` to the explicit ceil-based nearest-rank
+    convention (rank `ceil(q*n)`, 1-based): Python's `round()` (banker's
+    rounding) used to pick the lower rank inconsistently on even-length
+    windows."""
+    from repro.serve.metrics import _percentile
+    assert _percentile([], 0.5) == 0.0
+    assert _percentile([7.0], 0.5) == 7.0
+    assert _percentile([7.0], 0.95) == 7.0
+    # n=2: p50 -> rank ceil(1.0)=1 (lower median); p95 -> rank 2
+    assert _percentile([1.0, 2.0], 0.50) == 1.0
+    assert _percentile([1.0, 2.0], 0.95) == 2.0
+    # n=3: p50 -> rank ceil(1.5)=2 (true median); p95 -> rank 3
+    assert _percentile([1.0, 2.0, 3.0], 0.50) == 2.0
+    assert _percentile([1.0, 2.0, 3.0], 0.95) == 3.0
+    # n=20: p50 -> rank 10; p95 -> rank 19; extremes clamp to the sample
+    vals = [float(i) for i in range(1, 21)]
+    assert _percentile(vals, 0.50) == 10.0
+    assert _percentile(vals, 0.95) == 19.0
+    assert _percentile(vals, 0.0) == 1.0
+    assert _percentile(vals, 1.0) == 20.0
 
 
 def test_async_client_resolves_futures(cfg, params):
