@@ -1,9 +1,10 @@
 """Serving benchmark: steady-state decode throughput + TTFT percentiles.
 
-Replays a seeded Poisson-ish synthetic trace (mixed prompt lengths, all
-submitted up front — on CPU the engine is always the bottleneck, so arrival
-gaps only add noise) through a greedy :class:`repro.serve.ServeEngine` on
-the smoke arch and emits:
+Replays seeded synthetic traces from :mod:`repro.serve.trace` (the same
+generator the CLI uses — byte-identical workloads for the same seed;
+single-engine rows use the closed burst, ``rate=0``, because on CPU the
+engine is always the bottleneck and arrival gaps only add noise) through
+a greedy :class:`repro.serve.ServeEngine` on the smoke arch and emits:
 
 * ``serve/trace_e2e`` — wall µs to drain the whole fixed seeded trace on a
   warmed *dense-pool* engine (the timed row the regression gate covers:
@@ -30,6 +31,13 @@ the smoke arch and emits:
   head); the derived column carries the acceptance rate and the gated
   tokens-per-slot-tick figure, which must exceed 1 (asserted in-process —
   greedy speculation is lossless, so the row is pure scheduling speed);
+* ``serve/router_slo`` — the multi-replica tier: an *open-loop* Poisson
+  trace (rate 100 req/s — arrivals keep coming whether or not the tier
+  keeps up) through the :class:`repro.serve.Router` over two warmed paged
+  replicas, one TickDriver thread multiplexing both; the derived column
+  carries the aggregate p50/p95 TTFT **and end-to-end latency**
+  percentiles — the tier's SLO figures — plus dispatch balance and the
+  concurrency high-water-mark;
 * ``serve/large_pool`` — the 16-slot variant, emitted as *skipped* on CPU
   (one tick is minutes of wall clock at that batch) and timed on TPU.
 
@@ -49,21 +57,16 @@ import numpy as np
 from benchmarks import common
 
 
-def _trace(cfg, rng, n, max_prompt):
-    return [rng.integers(0, cfg.vocab_size,
-                         size=int(rng.integers(4, max_prompt + 1)))
-            for _ in range(n)]
+def _items(cfg, requests, max_new, *, mix, chunk=16, seed=0, rate=0.0):
+    """The shared seeded workload (:mod:`repro.serve.trace`): the SAME
+    spec the CLI replays, so bench and CLI serve byte-identical traces
+    for the same seed."""
+    from repro.serve import trace as trace_lib
 
-
-def _mixed_trace(cfg, rng, n, chunk, max_prompt):
-    """Alternate short (single-chunk) and long (multi-chunk) prompts."""
-    out = []
-    for i in range(n):
-        lo, hi = ((4, chunk) if i % 2 == 0
-                  else (chunk + 1, max_prompt))
-        out.append(rng.integers(0, cfg.vocab_size,
-                                size=int(rng.integers(lo, hi + 1))))
-    return out
+    spec = trace_lib.TraceSpec(requests=requests, seed=seed, rate=rate,
+                               min_prompt=4, max_prompt=48, mix=mix,
+                               chunk=chunk, max_new_tokens=max_new)
+    return trace_lib.generate(spec, cfg.vocab_size)
 
 
 def _drain(engine, prompts, max_new):
@@ -102,16 +105,59 @@ def _run_engine(slots: int, requests: int, max_new: int, seed: int = 0,
     engine.reset_metrics()
 
     if pool == "paged":
-        prompts = _mixed_trace(cfg, rng, requests,
-                               chunk=engine.prefill_chunk, max_prompt=48)
+        items = _items(cfg, requests, max_new, mix="bimodal",
+                       chunk=engine.prefill_chunk, seed=seed)
     else:
-        prompts = _trace(cfg, rng, requests, max_prompt=48)
+        items = _items(cfg, requests, max_new, mix="uniform", seed=seed)
+    prompts = [it.prompt for it in items]
     t0 = time.perf_counter()
     _drain(engine, prompts, max_new)
     wall = time.perf_counter() - t0
     assert engine.compile_stats["compiles"] == warm_compiles, \
         "benchmark trace hit a cold compile; widen the burn-in buckets"
     return engine.metrics.snapshot(), wall
+
+
+def _run_router(replicas: int, requests: int, max_new: int, rate: float,
+                seed: int = 0, slots: int = 2,
+                arch: str = "smollm-135m-smoke"):
+    """Open-loop SLO run: a seeded Poisson trace at ``rate`` req/s
+    replayed through the Router over ``replicas`` warmed paged engines,
+    one TickDriver thread multiplexing all of them. Returns the router
+    snapshot, the shed count, and the wall seconds from first arrival to
+    last result."""
+    from repro.configs import registry
+    from repro.serve import Router, ServeEngine, loader
+    from repro.serve import trace as trace_lib
+
+    cfg = registry.get(arch)
+    _, params = loader.load_for_serving(cfg, seed=0)
+    engines = []
+    rng = np.random.default_rng(seed)
+    for _ in range(replicas):
+        e = ServeEngine(cfg, params, slots=slots, max_len=96,
+                        pool="paged", seed=seed)
+        # same burn-in discipline as the single-engine rows: warm the
+        # chunk/decode compiles, then reset so cold TTFTs stay out of
+        # the percentiles
+        _drain(e, [rng.integers(0, cfg.vocab_size, size=n)
+                   for n in (8, 48)], 2)
+        e.reset_metrics()
+        engines.append(e)
+    warm = [e.compile_stats["compiles"] for e in engines]
+
+    items = _items(cfg, requests, max_new, mix="bimodal",
+                   chunk=engines[0].prefill_chunk, seed=seed, rate=rate)
+    router = Router(engines)
+    with router:
+        t0 = time.perf_counter()
+        futs, shed = trace_lib.replay(router.submit, items)
+        for f in futs:
+            f.result(timeout=600)
+        wall = time.perf_counter() - t0
+    assert [e.compile_stats["compiles"] for e in engines] == warm, \
+        "router trace hit a cold compile; widen the burn-in buckets"
+    return router.snapshot(), shed, wall
 
 
 def run(requests: int = 24, max_new: int = 8) -> None:
@@ -185,6 +231,27 @@ def run(requests: int = 24, max_new: int = 8) -> None:
         f"accepted_draft_tokens={sp['accepted_draft_tokens']};"
         f"requests={snap['requests_finished']};"
         f"tokens={snap['total_tokens']}")
+
+    # the multi-replica tier under fixed offered load: 2 paged replicas
+    # behind the Router, an open-loop Poisson trace (arrivals keep coming
+    # whether or not the tier keeps up, so queue depth and tail latency
+    # are real), one driver thread round-robining both engines. The row
+    # times first-arrival -> last-result; the derived column carries the
+    # SLO percentiles (TTFT and end-to-end latency) the router snapshot
+    # aggregates across replicas.
+    rsnap, shed, wall = _run_router(replicas=2, requests=requests,
+                                    max_new=max_new, rate=100.0)
+    common.emit(
+        "serve/router_slo", wall * 1e6,
+        f"p50_ttft_ms={rsnap['ttft_ms']['p50']};"
+        f"p95_ttft_ms={rsnap['ttft_ms']['p95']};"
+        f"p50_latency_ms={rsnap['latency_ms']['p50']};"
+        f"p95_latency_ms={rsnap['latency_ms']['p95']};"
+        f"replicas={rsnap['replicas']};"
+        f"dispatched={'/'.join(str(p['dispatched']) for p in rsnap['per_replica'])};"
+        f"max_concurrent={rsnap['max_concurrent_slots']};"
+        f"shed={shed};requeued={rsnap['requeued']};"
+        f"requests={rsnap['requests_finished']}")
 
     if jax.default_backend() == "tpu":
         snap, wall = _run_engine(slots=16, requests=4 * requests,

@@ -14,6 +14,12 @@ freed, request requeued, prefix recomputed — same greedy tokens out) and a
 request *cancelled* via ``client.cancel(rid)`` (its future resolves with
 ``RequestCancelled``).
 
+A third act runs the multi-replica tier: two engine replicas behind the
+:class:`repro.serve.Router` (weighted least-outstanding dispatch, one
+driver thread), with a live checkpoint hot-swap on a drained replica —
+the newest checkpoint on disk is deliberately torn, so the loader falls
+back to the newest *valid* one — while the other replica keeps serving.
+
 Run: ``PYTHONPATH=src python examples/serve_lm.py --arch smollm-135m-smoke``
 Try ``--arch recurrentgemma-2b-smoke`` (RG-LRU state: the engine switches
 to exact-length prefill buckets, since padding would corrupt the recurrent
@@ -103,6 +109,7 @@ def main():
              " (chunked prefill: one compile for all prompt lengths)"))
 
     lifecycle_demo(cfg, params, rng)
+    router_demo(cfg, params)
 
 
 def lifecycle_demo(cfg, params, rng):
@@ -142,6 +149,50 @@ def lifecycle_demo(cfg, params, rng):
     print(f"  engine counters: preempted={snap['preempted']} "
           f"recompute_tokens={snap['recompute_tokens']} "
           f"cancelled={snap['cancelled']}")
+
+
+def router_demo(cfg, params):
+    """Two replicas behind the Router: balanced dispatch, then a live
+    checkpoint hot-swap — drain replica 0, restore the newest *valid*
+    checkpoint (the newest on disk is deliberately torn), swap params,
+    undrain — while replica 1 keeps serving. No request is dropped."""
+    import tempfile
+
+    from repro.checkpoint.checkpointing import CheckpointManager
+    from repro.serve import Request, Router, ServeEngine
+    from repro.serve import trace as trace_lib
+    from repro.serve.faults import tear_checkpoint
+
+    print("\n-- router demo: 2 replicas, drain + checkpoint hot-swap --")
+    try:
+        engines = [ServeEngine(cfg, params, slots=2, max_len=32,
+                               page_size=8, prefill_chunk=4, seed=0)
+                   for _ in range(2)]
+    except ValueError as e:
+        print(f"  skipped: {e}")
+        return
+    items = trace_lib.generate(
+        trace_lib.TraceSpec(requests=6, seed=7, min_prompt=4,
+                            max_prompt=12, max_new_tokens=8),
+        cfg.vocab_size)
+    router = Router(engines)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir)
+        mgr.save(1, {"params": params})
+        mgr.save(2, {"params": params})
+        tear_checkpoint(ckpt_dir)      # newest step is now damaged
+        with router:
+            futs = [router.submit(it.request()) for it in items]
+            step = router.swap_checkpoint(0, ckpt_dir)
+            for fut in futs:
+                fut.result(timeout=600)
+    snap = router.snapshot()
+    print(f"  swapped replica 0 to checkpoint step {step} (newest was "
+          f"torn) while replica 1 served")
+    print(f"  dispatched={[p['dispatched'] for p in snap['per_replica']]} "
+          f"requeued={snap['requeued']} finished="
+          f"{snap['requests_finished']} ttft p50="
+          f"{snap['ttft_ms']['p50']:.1f} ms")
 
 
 if __name__ == "__main__":

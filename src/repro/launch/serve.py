@@ -3,11 +3,15 @@
     python -m repro.launch.serve --arch smollm-135m-smoke --requests 16 \
         --slots 4 --max-new 16 --rate 20
 
-Generates a seeded Poisson-ish workload (exponential inter-arrival gaps at
-``--rate`` req/s, mixed prompt lengths), submits it through the async
-:class:`~repro.serve.client.ServeClient`, and prints per-request TTFT/TPOT
-plus the engine's JSON metrics snapshot. ``--checkpoint-dir`` restores the
-newest valid :mod:`repro.checkpoint` checkpoint (fresh init otherwise);
+Generates a seeded open-loop workload via :mod:`repro.serve.trace`
+(Poisson arrivals at ``--rate`` req/s, ``--mix`` prompt lengths — the
+byte-identical trace the serving benchmarks replay for the same seed),
+submits it through the async :class:`~repro.serve.client.ServeClient` —
+or, with ``--replicas N``, through the multi-replica
+:class:`~repro.serve.router.Router` — and prints per-request TTFT/TPOT
+plus the JSON metrics snapshot (per-engine, or the router's aggregate
+with per-replica detail). ``--checkpoint-dir`` restores the newest valid
+:mod:`repro.checkpoint` checkpoint (fresh init otherwise);
 ``--mesh-shape 8`` serves over an 8-device ``("data",)`` mesh —
 ``--simulated-devices 8`` simulates one on CPU.
 
@@ -21,7 +25,6 @@ at ``--fault-rate`` per allocation, so recovery paths run under load.
 import argparse
 import json
 import sys
-import time
 
 # Simulated multi-device serving: the host device count must reach XLA
 # before jax initializes (jax-free helper shared with launch/train.py).
@@ -37,6 +40,10 @@ def main():
     ap.add_argument("--arch", default="smollm-135m-smoke")
     ap.add_argument("--requests", type=int, default=16,
                     help="number of synthetic requests to replay")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve over N in-process engine replicas behind "
+                         "the Router (weighted least-outstanding dispatch,"
+                         " QueueFull failover); 1 = plain ServeClient")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128,
                     help="per-slot budget: prompt + generated tokens")
@@ -76,6 +83,11 @@ def main():
                     help="per-call fire probability for --fault-seed")
     ap.add_argument("--min-prompt", type=int, default=4)
     ap.add_argument("--max-prompt", type=int, default=48)
+    ap.add_argument("--mix", default="uniform",
+                    choices=("uniform", "bimodal"),
+                    help="prompt-length mix (see repro.serve.trace): "
+                         "uniform over [min,max], or bimodal short/long "
+                         "around the prefill chunk")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="mean arrival rate (req/s); 0 = submit all "
                          "up front")
@@ -96,9 +108,8 @@ def main():
 
     from repro.configs import registry
     from repro.kernels.context import ExecutionContext
-    from repro.serve import (FaultInjector, QueueFull, Request,
-                             SamplingParams, ServeClient, ServeEngine,
-                             loader)
+    from repro.serve import (FaultInjector, Router, SamplingParams,
+                             ServeClient, ServeEngine, loader, trace)
 
     cfg = registry.get(args.arch)
     context = None
@@ -116,11 +127,15 @@ def main():
     step, params = loader.load_for_serving(cfg, args.checkpoint_dir,
                                            seed=args.seed)
     src = f"checkpoint step {step}" if step is not None else "fresh init"
-    faults = None
-    if args.fault_seed >= 0:
-        faults = FaultInjector(seed=args.fault_seed,
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas must be >= 1, got {args.replicas}")
+    # each replica gets its OWN injector (same seed => same per-replica
+    # schedule) so one replica's allocations don't advance another's dice
+    injectors = [FaultInjector(seed=args.fault_seed,
                                rates={"pool.alloc": args.fault_rate})
-    engine = ServeEngine(
+                 if args.fault_seed >= 0 else None
+                 for _ in range(args.replicas)]
+    engines = [ServeEngine(
         cfg, params, slots=args.slots, max_len=args.max_len,
         pool=args.pool, page_size=args.page_size,
         num_pages=args.num_pages or None,
@@ -130,15 +145,17 @@ def main():
         admission=args.admission, spec_k=args.spec_k,
         queue_limit=args.queue_limit or None,
         faults=faults, context=context, seed=args.seed)
+        for faults in injectors]
+    engine, faults = engines[0], injectors[0]
     print(f"[serve] {cfg.name} | params: {src} | slots={args.slots} "
           f"max_len={args.max_len} pool={engine.pool.kind} "
           f"chunk={engine.prefill_chunk} admission={engine.admission} "
           f"spec_k={engine.spec_k} "
           f"sampling=(T={args.temperature}, "
           f"k={args.top_k}, p={args.top_p})"
+          + (f" | replicas={args.replicas}" if args.replicas > 1 else "")
           + (f" | mesh={engine.ctx.mesh_layout()}" if engine.mesh else ""))
 
-    rng = np.random.default_rng(args.seed)
     hi = min(args.max_prompt, args.max_len - args.max_new)
     if hi < args.min_prompt:
         raise SystemExit(
@@ -146,68 +163,97 @@ def main():
             f"min(max-prompt {args.max_prompt}, max-len {args.max_len} - "
             f"max-new {args.max_new}) = {hi}; raise --max-len or lower "
             f"--max-new/--min-prompt")
-    lengths = rng.integers(args.min_prompt, hi + 1, size=args.requests)
+    try:
+        spec = trace.TraceSpec(
+            requests=args.requests, seed=args.seed, rate=args.rate,
+            min_prompt=args.min_prompt, max_prompt=hi, mix=args.mix,
+            chunk=engine.prefill_chunk or 16,
+            max_new_tokens=args.max_new)
+    except ValueError as e:
+        raise SystemExit(f"invalid trace: {e}")
+    items = trace.generate(spec, cfg.vocab_size)
+
+    # extras come off their own stream ([seed, 2]; the trace owns 0 and
+    # 1) so arming a frontend arch doesn't perturb the token workload
+    xrng = np.random.default_rng([args.seed, 2])
     def extras():
         # frontend-stub archs (VLM / enc-dec audio): per-request
         # precomputed embeddings, like the training pipeline's stubs
         out = {}
         if cfg.frontend == "vision":
-            out["frontend_embeds"] = rng.normal(
+            out["frontend_embeds"] = xrng.normal(
                 size=(1, cfg.frontend_tokens, cfg.d_model)).astype("float32")
         if cfg.n_enc_layers:
-            out["frames"] = rng.normal(
+            out["frames"] = xrng.normal(
                 size=(1, cfg.enc_seq, cfg.d_model)).astype("float32")
         return out or None
 
-    futs, shed = [], 0
-    with ServeClient(engine) as client:
-        for i, plen in enumerate(lengths):
-            prompt = rng.integers(0, cfg.vocab_size, size=int(plen))
-            try:
-                futs.append(client.submit(Request(
-                    prompt=prompt, max_new_tokens=args.max_new,
-                    extras=extras())))
-            except QueueFull:
-                # bounded queue shed this request: a real client retries
-                # against a replica; the replay just counts it
-                shed += 1
-            if args.rate > 0 and i + 1 < args.requests:
-                time.sleep(rng.exponential(1.0 / args.rate))
-        for fut in futs:
-            r = fut.result(timeout=600)
-            m = r.metrics
-            pre = f" preempt={m.preemptions}" if m.preemptions else ""
-            print(f"  req[{r.rid:03d}] prompt={m.prompt_len:3d} "
-                  f"new={m.new_tokens:3d} ttft={m.ttft * 1e3:7.1f} ms "
-                  f"tpot={m.tpot * 1e3:6.1f} ms "
-                  f"latency={m.latency * 1e3:7.1f} ms{pre}")
+    def show(fut):
+        r = fut.result(timeout=600)
+        m = r.metrics
+        pre = f" preempt={m.preemptions}" if m.preemptions else ""
+        print(f"  req[{r.rid:03d}] prompt={m.prompt_len:3d} "
+              f"new={m.new_tokens:3d} ttft={m.ttft * 1e3:7.1f} ms "
+              f"tpot={m.tpot * 1e3:6.1f} ms "
+              f"latency={m.latency * 1e3:7.1f} ms{pre}")
 
-    snap = engine.metrics.snapshot()
-    print(f"[serve] {snap['requests_finished']} requests, "
-          f"{snap['total_tokens']} tokens | decode "
-          f"{snap['decode_tok_per_s']:.1f} tok/s | occupancy "
-          f"{snap['slot_occupancy']:.2f} | ttft p50/p95 "
-          f"{snap['ttft_ms']['p50']:.1f}/{snap['ttft_ms']['p95']:.1f} ms | "
-          f"pool={snap['pool']['kind']} pages_hwm="
-          f"{snap['pool']['pages_hwm']}/{snap['pool']['total_pages']} | "
-          f"compiles={engine.compile_stats['compiles']}")
-    if snap["spec"]["k"]:
-        sp = snap["spec"]
-        print(f"[serve] speculative: k={sp['k']} "
-              f"acceptance={sp['acceptance_rate']:.3f} "
-              f"({sp['accepted_draft_tokens']}/{sp['draft_tokens']} drafts) "
-              f"tokens/slot-tick={sp['tokens_per_slot_tick']:.3f}")
-    if (shed or snap["preempted"] or snap["cancelled"]
-            or snap["deadline_expired"] or faults is not None):
-        inj = (f" | faults={faults.summary()}" if faults is not None
-               else "")
-        print(f"[serve] lifecycle: preempted={snap['preempted']} "
-              f"(recompute={snap['recompute_tokens']} tok) "
-              f"shed={shed} cancelled={snap['cancelled']} "
-              f"deadline_expired={snap['deadline_expired']}{inj}")
+    if args.replicas == 1:
+        with ServeClient(engine) as client:
+            futs, shed = trace.replay(client.submit, items,
+                                      request_kw={"extras": extras})
+            for fut in futs:
+                show(fut)
+        out = snap = engine.metrics.snapshot()
+        print(f"[serve] {snap['requests_finished']} requests, "
+              f"{snap['total_tokens']} tokens | decode "
+              f"{snap['decode_tok_per_s']:.1f} tok/s | occupancy "
+              f"{snap['slot_occupancy']:.2f} | ttft p50/p95 "
+              f"{snap['ttft_ms']['p50']:.1f}/{snap['ttft_ms']['p95']:.1f} "
+              f"ms | pool={snap['pool']['kind']} pages_hwm="
+              f"{snap['pool']['pages_hwm']}/{snap['pool']['total_pages']} "
+              f"| compiles={engine.compile_stats['compiles']}")
+        if snap["spec"]["k"]:
+            sp = snap["spec"]
+            print(f"[serve] speculative: k={sp['k']} "
+                  f"acceptance={sp['acceptance_rate']:.3f} "
+                  f"({sp['accepted_draft_tokens']}/{sp['draft_tokens']} "
+                  f"drafts) "
+                  f"tokens/slot-tick={sp['tokens_per_slot_tick']:.3f}")
+        if (shed or snap["preempted"] or snap["cancelled"]
+                or snap["deadline_expired"] or faults is not None):
+            inj = (f" | faults={faults.summary()}" if faults is not None
+                   else "")
+            print(f"[serve] lifecycle: preempted={snap['preempted']} "
+                  f"(recompute={snap['recompute_tokens']} tok) "
+                  f"shed={shed} cancelled={snap['cancelled']} "
+                  f"deadline_expired={snap['deadline_expired']}{inj}")
+    else:
+        router = Router(engines)
+        with router:
+            futs, shed = trace.replay(router.submit, items,
+                                      request_kw={"extras": extras})
+            for fut in futs:
+                show(fut)
+        out = rsnap = router.snapshot()
+        print(f"[serve] router: {rsnap['requests_finished']} requests "
+              f"over {rsnap['replicas']} replicas | dispatched="
+              f"{[p['dispatched'] for p in rsnap['per_replica']]} "
+              f"requeued={rsnap['requeued']} shed={shed} | ttft p50/p95 "
+              f"{rsnap['ttft_ms']['p50']:.1f}/"
+              f"{rsnap['ttft_ms']['p95']:.1f} ms | latency p50/p95 "
+              f"{rsnap['latency_ms']['p50']:.1f}/"
+              f"{rsnap['latency_ms']['p95']:.1f} ms | max_concurrent="
+              f"{rsnap['max_concurrent_slots']}")
+        for i, p in enumerate(rsnap["per_replica"]):
+            e = p["engine"]
+            print(f"  replica[{i}] finished="
+                  f"{e['requests_finished']} occupancy="
+                  f"{e['slot_occupancy']:.2f} pages_hwm="
+                  f"{e['pool']['pages_hwm']}/{e['pool']['total_pages']} "
+                  f"preempted={e['preempted']}")
     if args.metrics_json:
         with open(args.metrics_json, "w") as f:
-            json.dump(snap, f, indent=1)
+            json.dump(out, f, indent=1)
         print(f"[serve] wrote {args.metrics_json}")
 
 

@@ -18,26 +18,33 @@ growth, preempt-youngest/recompute on exhaustion). Lifecycle failures are
 typed — :class:`QueueFull`, :class:`DeadlineExceeded`,
 :class:`RequestCancelled`, :class:`EngineWedged` — and every recovery
 path is drivable on a seeded schedule via
-:class:`~repro.serve.faults.FaultInjector`. See :mod:`repro.serve.engine`
+:class:`~repro.serve.faults.FaultInjector`. Above the engine sits the
+multi-replica tier: :class:`~repro.serve.router.Router` dispatches
+requests across several in-process replicas (weighted least-outstanding,
+``QueueFull`` failover, drain + checkpoint hot-swap), all driven by ONE
+:class:`~repro.serve.client.TickDriver` thread; :mod:`repro.serve.trace`
+owns seeded open-loop load generation. See :mod:`repro.serve.engine`
 for the tick-loop / compile-cache design, :mod:`repro.serve.cache` for
 the pool API, :mod:`repro.serve.faults` for fault injection, and
 ``python -m repro.launch.serve --help`` for the workload-replay CLI.
 """
 
-from repro.serve import cache, faults, loader, metrics, sampling
+from repro.serve import cache, faults, loader, metrics, sampling, trace
 from repro.serve.cache import (CachePool, DenseCachePool, PagedCachePool,
                                PoolExhausted, make_pool)
-from repro.serve.client import EngineWedged, ServeClient
+from repro.serve.client import EngineWedged, ServeClient, TickDriver
 from repro.serve.engine import (CompileCache, DeadlineExceeded,
                                 GenerationResult, QueueFull, Request,
                                 RequestCancelled, ServeEngine)
 from repro.serve.faults import FaultInjector, InjectedFault
 from repro.serve.metrics import EngineMetrics, RequestMetrics
+from repro.serve.router import Router
 from repro.serve.sampling import GREEDY, SamplingParams, sample_logits
+from repro.serve.trace import TraceItem, TraceSpec
 
 __all__ = [
-    # engine + client
-    "ServeEngine", "ServeClient", "CompileCache",
+    # engine + client + router
+    "ServeEngine", "ServeClient", "TickDriver", "Router", "CompileCache",
     # request/result surface
     "Request", "GenerationResult",
     # typed lifecycle failures
@@ -51,6 +58,8 @@ __all__ = [
     "EngineMetrics", "RequestMetrics",
     # sampling
     "SamplingParams", "GREEDY", "sample_logits",
+    # load generation
+    "TraceSpec", "TraceItem",
     # submodules
-    "cache", "faults", "loader", "metrics", "sampling",
+    "cache", "faults", "loader", "metrics", "sampling", "trace",
 ]

@@ -1,12 +1,21 @@
-"""In-process async client: ``submit() -> Future`` over a driver thread.
+"""The tick driver + in-process async client.
 
-The engine's tick loop is single-threaded by contract; the client owns that
-thread. ``submit()`` enqueues on the (thread-safe) engine and wakes the
-driver, which runs ticks while work exists and parks on an event when the
-engine drains — no busy-polling between bursts. Futures resolve to
-:class:`repro.serve.engine.GenerationResult` as requests finish, in
-completion (not submission) order, which is the whole point of continuous
-batching.
+The engine's tick loop is single-threaded by contract; :class:`TickDriver`
+owns that thread. It drives any *tickable* — an object with
+``has_work() -> bool``, ``step()``, and ``abort_all(exc)`` — which is a
+:class:`~repro.serve.engine.ServeEngine` for the single-engine
+:class:`ServeClient`, and a :class:`repro.serve.router.Router` (whose one
+``step()`` round-robins a tick over every replica) for the multi-replica
+tier: ONE thread multiplexes all replicas, so router scheduling stays as
+deterministic and CPU-testable as the engine itself.
+
+The driver loop: ping the heartbeat, ``step()`` while work exists, park on
+a wake event when the target drains — no busy-polling between bursts. A
+``step()`` that *raises* stops the driver and fails every outstanding
+future with the real error via ``abort_all`` (no stranded futures on a
+dead daemon thread); a ``step()`` that never *returns* is caught by the
+heartbeat watchdog (``tick_timeout``) and surfaces as
+:class:`EngineWedged`.
 
     with ServeClient(engine) as client:
         futs = [client.submit(Request(prompt=p, max_new_tokens=16))
@@ -15,16 +24,17 @@ batching.
 
 Liveness: with ``tick_timeout`` set, a :class:`repro.runtime.
 fault_tolerance.HeartbeatMonitor` watches the driver thread — every loop
-iteration pings it, so a *wedged tick* (``engine.step()`` stuck in a hung
-device call) goes silent and the watchdog fires within ``tick_timeout``
-seconds: outstanding futures fail with :class:`EngineWedged` instead of
-hanging until their ``result()`` timeouts, and further submissions are
-refused. Detection, not recovery — the wedged thread itself cannot be
-killed from Python; the point is that callers *find out*.
+iteration pings it, so a *wedged tick* (``step()`` stuck in a hung device
+call) goes silent and the watchdog fires within ``tick_timeout`` seconds:
+outstanding futures fail with :class:`EngineWedged` instead of hanging
+until their ``result()`` timeouts, and further submissions are refused.
+Detection, not recovery — the wedged thread itself cannot be killed from
+Python; the point is that callers *find out*.
 """
 
 from __future__ import annotations
 
+import contextlib
 import threading
 from concurrent.futures import Future
 from typing import Optional
@@ -37,9 +47,9 @@ _DRIVER = "serve-driver"
 
 
 class EngineWedged(RuntimeError):
-    """The driver thread stopped ticking (a hung ``engine.step()``): the
+    """The driver thread stopped ticking (a hung ``step()``): the
     heartbeat watchdog failed all outstanding futures and closed the
-    client to new submissions. Distinct from a tick that *raises* (futures
+    driver to new submissions. Distinct from a tick that *raises* (futures
     get the real exception) — this is the tick that never returns."""
 
     def __init__(self, timeout: float):
@@ -50,27 +60,34 @@ class EngineWedged(RuntimeError):
         self.timeout = timeout
 
 
-class ServeClient:
-    """Async facade over a :class:`ServeEngine` (one driver thread).
+class TickDriver:
+    """One daemon thread driving a tickable's ``step()`` loop.
 
-    ``tick_timeout`` (seconds, ``None`` = no watchdog) arms the heartbeat
-    monitor described in the module docstring. It bounds one *loop
-    iteration* — a tick plus the idle park (50 ms) — so set it comfortably
-    above the slowest expected tick (compile ticks included), not above
-    the whole request latency.
+    ``target`` needs three methods: ``has_work()`` (anything queued or in
+    flight?), ``step()`` (advance one tick — for a router, one round-robin
+    pass over its replicas), and ``abort_all(exc)`` (fail every
+    outstanding future). ``tick_timeout`` (seconds, ``None`` = no
+    watchdog) bounds one *loop iteration* — a tick plus the idle park
+    (50 ms) — so set it comfortably above the slowest expected tick
+    (compile ticks included), not above the whole request latency.
+
+    Whoever enqueues work onto the target must do it inside
+    :meth:`submit_scope` (which raises once the driver stopped) and then
+    :meth:`wake` the thread — that ordering is what guarantees a submit
+    racing :meth:`close` either lands before the post-exit sweep (and is
+    failed by it) or observes the stop flag and raises, never leaving a
+    silently stranded future.
     """
 
-    def __init__(self, engine: ServeEngine,
-                 tick_timeout: Optional[float] = None):
-        self.engine = engine
+    def __init__(self, target, tick_timeout: Optional[float] = None,
+                 name: str = "serve-engine"):
+        self.target = target
         self.tick_timeout = tick_timeout
         self.wedged = False
         self._wake = threading.Event()
         self._stop = threading.Event()
-        # serializes submit's stop-check+enqueue against the driver's
-        # post-exit sweep, so a submit racing close() either enqueues
-        # before the sweep (and gets failed by it) or observes the stop
-        # flag and raises — never a silently stranded future
+        # serializes submit_scope's stop-check+enqueue against the
+        # driver's post-exit sweep (see class docstring)
         self._lock = threading.Lock()
         self._hb: Optional[HeartbeatMonitor] = None
         if tick_timeout is not None:
@@ -81,40 +98,34 @@ class ServeClient:
                 [_DRIVER], timeout=tick_timeout,
                 on_failure=self._on_wedged,
                 poll=min(0.05, tick_timeout / 4))
-        self._thread = threading.Thread(target=self._drive,
-                                        name="serve-engine", daemon=True)
+        self._thread = threading.Thread(target=self._drive, name=name,
+                                        daemon=True)
         self._thread.start()
 
     # -- public --------------------------------------------------------
 
-    def submit(self, request: Request, *legacy_args, **legacy_kwargs
-               ) -> Future:
-        """Queue a :class:`repro.serve.Request`; the engine raises a
-        migration ``TypeError`` for the removed positional form."""
+    @contextlib.contextmanager
+    def submit_scope(self):
+        """Context for enqueueing work on the target: raises when the
+        driver has stopped (wedged or closed), and serializes against the
+        post-exit sweep so the enqueued future can never be stranded.
+        Call :meth:`wake` after the scope exits."""
         with self._lock:
             if self._stop.is_set():
                 raise RuntimeError(
                     "client is wedged" if self.wedged else
                     "client is closed")
-            fut = self.engine.submit(request, *legacy_args,
-                                     **legacy_kwargs)
+            yield
+
+    def wake(self) -> None:
         self._wake.set()
-        return fut
 
-    def cancel(self, rid: int) -> bool:
-        """Cancel a queued or in-flight request by rid (thread-safe).
-
-        Returns whether the engine currently knows the rid; when it does,
-        the request's future resolves with
-        :class:`~repro.serve.engine.RequestCancelled` at the next tick
-        boundary and its slot + pages free immediately there."""
-        known = self.engine.cancel(rid)
-        if known:
-            self._wake.set()
-        return known
+    @property
+    def stopped(self) -> bool:
+        return self._stop.is_set()
 
     def close(self, timeout: float = 60.0) -> None:
-        """Stop the driver thread after the engine drains its current
+        """Stop the driver thread after the target drains its current
         work; idempotent."""
         self._stop.set()
         self._wake.set()
@@ -122,29 +133,22 @@ class ServeClient:
         if self._hb is not None:
             self._hb.close()
 
-    def __enter__(self) -> "ServeClient":
-        return self
-
-    def __exit__(self, *exc) -> bool:
-        self.close()
-        return False
-
     # -- watchdog ------------------------------------------------------
 
     def _on_wedged(self, worker: str) -> None:
         """Heartbeat callback (watchdog thread): the driver went silent.
 
         Best-effort crash surfacing — the wedged thread may sit inside a
-        hung tick holding partial slot state, so the engine is NOT safe to
+        hung tick holding partial slot state, so the target is NOT safe to
         reuse afterwards; what matters is that every outstanding future
         resolves with :class:`EngineWedged` instead of hanging, and that
-        ``submit()`` refuses new work."""
+        submits are refused."""
         self.wedged = True
         self._stop.set()
         self._wake.set()
         with self._lock:
-            if self.engine.has_work():
-                self.engine.abort_all(EngineWedged(self.tick_timeout))
+            if self.target.has_work():
+                self.target.abort_all(EngineWedged(self.tick_timeout))
 
     # -- driver --------------------------------------------------------
 
@@ -157,13 +161,13 @@ class ServeClient:
                 # watchdog declared us wedged while we were merely slow:
                 # it already swept the futures; just exit
                 return
-            if self.engine.has_work():
+            if self.target.has_work():
                 try:
-                    self.engine.step()
+                    self.target.step()
                 except BaseException as e:
                     # a dead driver must not strand futures: fail every
                     # queued/in-flight request with the real error and
-                    # refuse further submissions (submit() raises once
+                    # refuse further submissions (submit_scope raises once
                     # _stop is set)
                     self._stop.set()
                     exc = e
@@ -173,9 +177,68 @@ class ServeClient:
                 break
             self._wake.wait(timeout=0.05)
             self._wake.clear()
-        # post-exit sweep, serialized against submit: anything that raced
-        # its way into the queue after our last has_work() look resolves
-        # with an error instead of hanging until a result() timeout
+        # post-exit sweep, serialized against submit_scope: anything that
+        # raced its way into the queue after our last has_work() look
+        # resolves with an error instead of hanging until a result()
+        # timeout
         with self._lock:
-            if self.engine.has_work():
-                self.engine.abort_all(exc)
+            if self.target.has_work():
+                self.target.abort_all(exc)
+
+
+class ServeClient:
+    """Async facade over a :class:`ServeEngine` (one driver thread).
+
+    ``submit() -> Future`` over a :class:`TickDriver` that owns the
+    engine's tick loop; futures resolve to
+    :class:`~repro.serve.engine.GenerationResult` as requests finish, in
+    completion (not submission) order — which is the whole point of
+    continuous batching. ``tick_timeout`` arms the driver's heartbeat
+    watchdog (see :class:`TickDriver`).
+    """
+
+    def __init__(self, engine: ServeEngine,
+                 tick_timeout: Optional[float] = None):
+        self.engine = engine
+        self.tick_timeout = tick_timeout
+        self._driver = TickDriver(engine, tick_timeout=tick_timeout)
+
+    # -- public --------------------------------------------------------
+
+    @property
+    def wedged(self) -> bool:
+        return self._driver.wedged
+
+    def submit(self, request: Request, *legacy_args, **legacy_kwargs
+               ) -> Future:
+        """Queue a :class:`repro.serve.Request`; the engine raises a
+        migration ``TypeError`` for the removed positional form."""
+        with self._driver.submit_scope():
+            fut = self.engine.submit(request, *legacy_args,
+                                     **legacy_kwargs)
+        self._driver.wake()
+        return fut
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or in-flight request by rid (thread-safe).
+
+        Returns whether the engine currently knows the rid; when it does,
+        the request's future resolves with
+        :class:`~repro.serve.engine.RequestCancelled` at the next tick
+        boundary and its slot + pages free immediately there."""
+        known = self.engine.cancel(rid)
+        if known:
+            self._driver.wake()
+        return known
+
+    def close(self, timeout: float = 60.0) -> None:
+        """Stop the driver thread after the engine drains its current
+        work; idempotent."""
+        self._driver.close(timeout=timeout)
+
+    def __enter__(self) -> "ServeClient":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

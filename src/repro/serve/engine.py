@@ -574,7 +574,7 @@ class ServeEngine:
                 rid = self._next_rid
             else:
                 rid = int(request.rid)
-                if rid in self.metrics.requests:
+                if self.metrics.request(rid) is not None:
                     raise ValueError(f"rid {rid} is already in flight")
             self._next_rid = max(self._next_rid, rid) + 1
             slot = _Slot(req=request, rid=rid, future=Future(),
@@ -587,6 +587,85 @@ class ServeEngine:
         with self._lock:
             queued = bool(self._queue)
         return queued or any(s is not None for s in self._slots)
+
+    def occupied_slots(self) -> int:
+        """Decode lanes currently holding an admitted request."""
+        return sum(s is not None for s in self._slots)
+
+    def queued(self) -> int:
+        """Requests waiting for admission (thread-safe)."""
+        with self._lock:
+            return len(self._queue)
+
+    def outstanding(self) -> int:
+        """Queued + in-flight requests — the load signal a router's
+        least-outstanding-requests dispatch reads (thread-safe)."""
+        return self.queued() + self.occupied_slots()
+
+    # -- router surface (driver-thread only, except where noted) --------
+
+    def drain_queued(self) -> List[Tuple["_Slot", object]]:
+        """Pop every not-yet-admitted request off the queue, returning
+        ``(slot, record)`` pairs for :meth:`adopt` on another replica.
+
+        The internal slot travels whole so preemption-recompute state
+        (``prefill_seq`` carrying already-generated tokens) survives the
+        move; the metrics record is evicted here and re-registered by
+        ``adopt`` so TTFT/latency still span from the original submit.
+        Must run on the tick-driver thread: admission peeks the queue
+        head and pops it in two lock sections, so stealing the queue
+        from another thread could race a mid-admission pop.
+        """
+        with self._lock:
+            stolen = list(self._queue)
+            self._queue.clear()
+        return [(s, self.metrics.evict(s.rid)) for s in stolen]
+
+    def adopt(self, slot: "_Slot", record=None, *, front: bool = False
+              ) -> None:
+        """Enqueue a slot drained from another replica — same
+        :class:`Request`, same ``Future``, same generated-token state.
+
+        The request was already admitted by the tier, so the bounded
+        ``queue_limit`` does not apply (shedding it here would drop work
+        the client was promised). Assumes replica geometry is uniform
+        (same ``max_len``; chunked prefill wherever preempted slots may
+        move) — the :class:`repro.serve.router.Router` constructor
+        enforces this. Thread-safe.
+        """
+        budget = int(slot.prompt.size) + slot.req.max_new_tokens
+        if budget > self.max_len:
+            raise ValueError(
+                f"adopted request {slot.rid} needs {budget} tokens but "
+                f"this replica's max_len is {self.max_len} — router "
+                f"replicas must have uniform geometry")
+        with self._lock:
+            if (self.metrics.request(slot.rid) is not None
+                    or any(s.rid == slot.rid for s in self._queue)):
+                raise ValueError(f"rid {slot.rid} is already live on "
+                                 f"this replica")
+            self._next_rid = max(self._next_rid, slot.rid + 1)
+            if record is not None:
+                self.metrics.adopt(record)
+            else:
+                self.metrics.on_submit(slot.rid, int(slot.prompt.size))
+            if front:
+                self._queue.appendleft(slot)
+            else:
+                self._queue.append(slot)
+
+    def set_params(self, params) -> None:
+        """Hot-swap the model parameters (checkpoint swap on a drained
+        replica). Compiled steps are pure functions of the param arrays,
+        so no retrace happens as long as shapes/dtypes match — which the
+        loader's template-validated restore guarantees. Refuses to swap
+        under live requests: a mid-flight swap would splice two
+        checkpoints into one output stream."""
+        if self.has_work():
+            raise RuntimeError(
+                "set_params with requests queued or in flight — drain "
+                "this engine first (Router.drain + wait_drained)")
+        self._params = params
 
     def abort_all(self, exc: BaseException) -> None:
         """Fail every queued and in-flight request with ``exc``.
@@ -608,7 +687,7 @@ class ServeEngine:
                 dead.append(s)
         self.metrics.sync_pool(self.pool)
         for s in dead:
-            self.metrics.requests.pop(s.rid, None)
+            self.metrics.evict(s.rid)
             if not s.future.done():
                 s.future.set_exception(exc)
 
@@ -676,7 +755,7 @@ class ServeEngine:
             self._chunk_tick()
         if any(s is not None and s.decoding for s in self._slots):
             self._decode_tick()
-        self.metrics.ticks += 1
+        self.metrics.on_tick()
         return sum(s is not None for s in self._slots)
 
     def run_until_idle(self, max_ticks: int = 100_000) -> int:
@@ -719,7 +798,7 @@ class ServeEngine:
             except PoolExhausted:
                 # keep FIFO order: the head request waits for pages freed
                 # by finishing slots; admission retries every tick
-                self.metrics.pool_exhausted_events += 1
+                self.metrics.on_pool_exhausted()
                 return
             with self._lock:
                 self._queue.popleft()
@@ -915,7 +994,7 @@ class ServeEngine:
                     self.pool.alloc_pages(i, need)
                     break
                 except PoolExhausted:
-                    self.metrics.pool_exhausted_events += 1
+                    self.metrics.on_pool_exhausted()
                     victim = max(
                         (j for j, v in enumerate(self._slots)
                          if v is not None),

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import collections
 import math
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
@@ -97,6 +98,14 @@ class EngineMetrics:
     while the lifetime totals (``requests_finished`` / ``finished_tokens``)
     keep counting. Percentiles in :meth:`snapshot` are therefore over the
     most recent ``max_request_history`` finished requests.
+
+    Thread-safety: the driver thread mutates these counters while a client
+    thread may call :meth:`snapshot` (the CLI's periodic dump, the
+    router's health probe) — every recorder and every reader therefore
+    takes one internal re-entrant lock. Mutate ONLY through the ``on_*``
+    recorders; bare ``metrics.field += 1`` from outside this class would
+    bypass the lock (the hammer test in ``tests/test_serve.py`` drives a
+    recorder storm against a snapshot loop to keep this honest).
     """
 
     slots: int
@@ -134,65 +143,88 @@ class EngineMetrics:
     def __post_init__(self):
         self._history: Deque[RequestMetrics] = collections.deque(
             maxlen=self.max_request_history)
+        # re-entrant: snapshot() composes finished() under the same lock
+        self._lock = threading.RLock()
 
     # -- recording (engine-internal) -----------------------------------
 
     def request(self, rid: int) -> Optional[RequestMetrics]:
-        return self.requests.get(rid)
+        with self._lock:
+            return self.requests.get(rid)
 
     def on_submit(self, rid: int, prompt_len: int) -> RequestMetrics:
-        rm = RequestMetrics(rid=rid, prompt_len=prompt_len,
-                            submit_t=self.clock(), submit_tick=self.ticks)
-        self.requests[rid] = rm
-        return rm
+        with self._lock:
+            rm = RequestMetrics(rid=rid, prompt_len=prompt_len,
+                                submit_t=self.clock(),
+                                submit_tick=self.ticks)
+            self.requests[rid] = rm
+            return rm
 
     def on_admit(self, rid: int) -> None:
-        rm = self.requests[rid]
-        rm.admit_t = self.clock()
-        rm.admit_tick = self.ticks
+        with self._lock:
+            rm = self.requests[rid]
+            rm.admit_t = self.clock()
+            rm.admit_tick = self.ticks
+
+    def on_tick(self) -> None:
+        """One engine tick completed (the deterministic clock)."""
+        with self._lock:
+            self.ticks += 1
 
     def on_prefill_work(self, tokens: int, dt: float,
                         chunked: bool = False) -> None:
         """Prompt tokens pushed through a prefill call (whole-bucket or one
         chunked-prefill pool tick)."""
-        self.prefill_tokens += tokens
-        self.prefill_time_s += dt
-        if chunked:
-            self.chunk_ticks += 1
+        with self._lock:
+            self.prefill_tokens += tokens
+            self.prefill_time_s += dt
+            if chunked:
+                self.chunk_ticks += 1
 
     def on_prefill_done(self) -> None:
-        self.prefills += 1
+        with self._lock:
+            self.prefills += 1
 
     def on_first_token(self, rid: int) -> None:
         """The request's first token was sampled (straight off the prefill
         logits — at admission for bucketed prefill, at final-chunk
         completion for chunked prefill)."""
-        rm = self.requests[rid]
-        rm.first_token_t = self.clock()
-        rm.new_tokens = 1
+        with self._lock:
+            rm = self.requests[rid]
+            rm.first_token_t = self.clock()
+            rm.new_tokens = 1
 
     def on_decode_tick(self, active_slots: int, new_tokens: int,
                        dt: float) -> None:
-        self.decode_steps += 1
-        self.occupied_slot_ticks += active_slots
-        self.decode_tokens += new_tokens
-        self.decode_time_s += dt
+        with self._lock:
+            self.decode_steps += 1
+            self.occupied_slot_ticks += active_slots
+            self.decode_tokens += new_tokens
+            self.decode_time_s += dt
 
     def on_occupancy(self, occupied_slots: int) -> None:
-        self.max_concurrent_slots = max(self.max_concurrent_slots,
-                                        occupied_slots)
+        with self._lock:
+            self.max_concurrent_slots = max(self.max_concurrent_slots,
+                                            occupied_slots)
+
+    def on_pool_exhausted(self) -> None:
+        """An admission or page-growth attempt hit ``PoolExhausted``."""
+        with self._lock:
+            self.pool_exhausted_events += 1
 
     def sync_pool(self, pool) -> None:
         """Refresh the page-pool gauges from a
         :class:`repro.serve.cache.CachePool`."""
-        self.pages_in_use = pool.pages_in_use
-        self.pages_hwm = pool.pages_hwm
+        with self._lock:
+            self.pages_in_use = pool.pages_in_use
+            self.pages_hwm = pool.pages_hwm
 
     def on_token(self, rid: int, n: int = 1) -> None:
         """``n`` tokens committed to the request's output stream (n > 1
         only under speculative decoding, where a tick can commit up to
         ``spec_k + 1`` tokens per slot)."""
-        self.requests[rid].new_tokens += n
+        with self._lock:
+            self.requests[rid].new_tokens += n
 
     def on_spec_tick(self, drafted: int, accepted: int) -> None:
         """One speculative decode tick: ``drafted`` proposals went into the
@@ -200,56 +232,86 @@ class EngineMetrics:
         token each slot gets from the verify logits themselves is *not* a
         draft token and is excluded from both counters, so
         ``acceptance_rate`` isolates draft-head quality."""
-        self.spec_ticks += 1
-        self.draft_tokens += drafted
-        self.accepted_draft_tokens += accepted
+        with self._lock:
+            self.spec_ticks += 1
+            self.draft_tokens += drafted
+            self.accepted_draft_tokens += accepted
 
     def on_preempt(self, rid: int, computed_tokens: int) -> None:
         """A slot was kicked for pages; ``computed_tokens`` is the prefix
         (prompt positions prefilled + tokens decoded) that must be
         recomputed via chunked prefill on re-admission."""
-        self.preempted += 1
-        self.recompute_tokens += computed_tokens
-        rm = self.requests.get(rid)
-        if rm is not None:
-            rm.preemptions += 1
+        with self._lock:
+            self.preempted += 1
+            self.recompute_tokens += computed_tokens
+            rm = self.requests.get(rid)
+            if rm is not None:
+                rm.preemptions += 1
 
     def on_cancel(self, rid: int) -> None:
         """The request was cancelled: evict its record without entering the
         finished history (it produced no result to aggregate)."""
-        self.cancelled += 1
-        self.requests.pop(rid, None)
+        with self._lock:
+            self.cancelled += 1
+            self.requests.pop(rid, None)
 
     def on_deadline(self, rid: int) -> None:
         """The request blew its deadline: evict like a cancel."""
-        self.deadline_expired += 1
-        self.requests.pop(rid, None)
+        with self._lock:
+            self.deadline_expired += 1
+            self.requests.pop(rid, None)
 
     def on_queue_full(self) -> None:
-        self.rejected_queue_full += 1
+        with self._lock:
+            self.rejected_queue_full += 1
+
+    def evict(self, rid: int) -> Optional[RequestMetrics]:
+        """Remove and return an in-flight record without counting it
+        anywhere — the abort sweep and the router's drain-requeue path
+        (where :meth:`adopt` re-registers it on another replica)."""
+        with self._lock:
+            return self.requests.pop(rid, None)
+
+    def adopt(self, rm: RequestMetrics) -> None:
+        """Re-register a record evicted from another replica (router
+        requeue). Wall-clock fields survive the move, so TTFT/latency
+        still span from the ORIGINAL submit; ``submit_tick`` is rebased
+        to this engine's tick clock (tick clocks are per-engine, and
+        ``deadline_ticks`` is measured against it)."""
+        with self._lock:
+            rm.submit_tick = self.ticks
+            rm.admit_tick = -1
+            self.requests[rm.rid] = rm
 
     def on_finish(self, rid: int) -> RequestMetrics:
         """Finalize + evict a request's record (bounded-history move);
         returns it so the engine can attach it to the GenerationResult."""
-        rm = self.requests.pop(rid)
-        rm.finish_t = self.clock()
-        rm.finish_tick = self.ticks
-        self._history.append(rm)
-        self.requests_finished += 1
-        self.finished_tokens += rm.new_tokens
-        return rm
+        with self._lock:
+            rm = self.requests.pop(rid)
+            rm.finish_t = self.clock()
+            rm.finish_tick = self.ticks
+            self._history.append(rm)
+            self.requests_finished += 1
+            self.finished_tokens += rm.new_tokens
+            return rm
 
     # -- reporting -----------------------------------------------------
 
     def finished(self) -> List[RequestMetrics]:
         """The most recent ``max_request_history`` finished requests."""
-        return list(self._history)
+        with self._lock:
+            return list(self._history)
 
     def snapshot(self) -> Dict:
         """JSON-able summary: throughput, latency percentiles, occupancy.
         Percentiles and the per-request list cover the bounded recent
         window; the ``requests_finished``/``total_tokens`` counters are
-        lifetime totals."""
+        lifetime totals. Safe to call from any thread while the driver
+        records (one consistent cut under the metrics lock)."""
+        with self._lock:
+            return self._snapshot_locked()
+
+    def _snapshot_locked(self) -> Dict:
         done = self.finished()
         ttfts = sorted(r.ttft for r in done)
         tpots = sorted(r.tpot for r in done if r.new_tokens > 1)

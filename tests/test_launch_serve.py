@@ -1,0 +1,67 @@
+"""In-process smoke tests for the serving CLI (`python -m
+repro.launch.serve`): the full entrypoint — arg parsing, engine/router
+construction, trace generation + open-loop replay, fault arming, metrics
+JSON — driven by calling `main()` with a patched argv, so CI catches CLI
+breakage without a subprocess (and without re-importing jax)."""
+
+import json
+import sys
+
+import pytest
+
+ARCH = "smollm-135m-smoke"
+
+
+def _run_cli(monkeypatch, *argv):
+    import repro.launch.serve as serve_cli
+
+    monkeypatch.setattr(sys, "argv", ["repro.launch.serve", *argv])
+    serve_cli.main()
+
+
+def test_cli_paged_trace_with_armed_faults(monkeypatch, tmp_path, capsys):
+    """Small paged trace with the fault injector armed at a rate high
+    enough to actually fire recovery paths; the metrics JSON must land
+    and parse."""
+    out = tmp_path / "metrics.json"
+    _run_cli(monkeypatch,
+             "--arch", ARCH, "--requests", "3", "--slots", "2",
+             "--max-len", "48", "--max-new", "4", "--pool", "paged",
+             "--fault-seed", "0", "--fault-rate", "0.05",
+             "--metrics-json", str(out))
+    text = capsys.readouterr().out
+    assert "[serve]" in text and "ttft" in text
+    snap = json.loads(out.read_text())
+    assert snap["requests_finished"] == 3
+    assert snap["pool"]["kind"] == "paged"
+    assert snap["ttft_ms"]["p50"] <= snap["ttft_ms"]["p95"]
+
+
+def test_cli_two_replicas_writes_router_snapshot(monkeypatch, tmp_path,
+                                                 capsys):
+    """--replicas 2 routes the same trace through the Router; the JSON
+    is the tier snapshot (aggregate SLO percentiles + per-replica
+    engine detail)."""
+    out = tmp_path / "router.json"
+    _run_cli(monkeypatch,
+             "--arch", ARCH, "--requests", "4", "--slots", "2",
+             "--max-len", "48", "--max-new", "4", "--replicas", "2",
+             "--rate", "50", "--mix", "bimodal",
+             "--metrics-json", str(out))
+    text = capsys.readouterr().out
+    assert "replicas=2" in text and "[serve] router:" in text
+    snap = json.loads(out.read_text())
+    assert snap["replicas"] == 2
+    assert snap["requests_finished"] == 4
+    assert len(snap["per_replica"]) == 2
+    assert sum(p["dispatched"] for p in snap["per_replica"]) == 4
+    assert {"p50", "p95"} <= set(snap["latency_ms"])
+
+
+def test_cli_rejects_bad_geometry(monkeypatch, tmp_path):
+    with pytest.raises(SystemExit, match="no valid prompt length"):
+        _run_cli(monkeypatch, "--arch", ARCH, "--requests", "2",
+                 "--max-len", "16", "--max-new", "14",
+                 "--min-prompt", "8")
+    with pytest.raises(SystemExit, match="--replicas"):
+        _run_cli(monkeypatch, "--arch", ARCH, "--replicas", "0")

@@ -728,3 +728,61 @@ def test_sharded_engine_matches_unsharded():
     got, eng = run(ExecutionContext(mesh_shape=(8,)))
     assert eng.ctx.mesh_layout() == "data=8"
     assert got == want
+
+
+def test_engine_metrics_snapshot_races_recorder_storm():
+    """EngineMetrics is mutated by the driver thread while `snapshot()`
+    reads from the client thread; every recorder and both readers hold
+    the metrics lock. Hammer: one thread runs the full recorder lifecycle
+    in a tight loop while the main thread snapshots — every snapshot must
+    be internally consistent (no torn reads, no dict-mutated-during-
+    iteration), and the final state must count every request exactly
+    once."""
+    import threading
+
+    from repro.serve.metrics import EngineMetrics
+
+    m = EngineMetrics(slots=2)
+    n_requests = 3000
+    stop = threading.Event()
+    start = threading.Barrier(2)
+    storm_error = []
+
+    def storm():
+        try:
+            start.wait()
+            for rid in range(n_requests):
+                m.on_submit(rid, prompt_len=8)
+                m.on_tick()
+                m.on_admit(rid)
+                m.on_prefill_work(8, 0.001, chunked=True)
+                m.on_prefill_done()
+                m.on_first_token(rid)
+                m.on_token(rid, 2)
+                m.on_decode_tick(1, 1, 0.001)
+                m.on_occupancy(1)
+                m.on_pool_exhausted()
+                m.on_finish(rid)
+        except BaseException as e:     # surfaces in the main thread
+            storm_error.append(e)
+        finally:
+            stop.set()
+
+    t = threading.Thread(target=storm)
+    t.start()
+    snaps = 0
+    start.wait()
+    while not stop.is_set():
+        snap = m.snapshot()
+        # internal consistency under concurrent mutation: the finished
+        # window and its percentiles come from one locked pass
+        assert snap["ttft_ms"]["p50"] <= snap["ttft_ms"]["p95"]
+        assert 0 <= snap["requests_finished"] <= n_requests
+        snaps += 1
+    t.join()
+    assert not storm_error, storm_error
+    final = m.snapshot()
+    assert final["requests_finished"] == n_requests
+    assert final["total_tokens"] == n_requests * 3
+    assert final["max_concurrent_slots"] == 1
+    assert snaps > 0

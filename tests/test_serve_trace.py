@@ -1,0 +1,135 @@
+"""The seeded load generator (`repro.serve.trace`): determinism, stream
+splitting, mixes, and open-loop replay. Pure-Python — no engine, no jax.
+"""
+
+import pytest
+
+from repro.serve import QueueFull, Request
+from repro.serve.trace import TraceItem, TraceSpec, generate, replay
+
+VOCAB = 128
+
+
+def test_same_spec_same_trace():
+    spec = TraceSpec(requests=16, seed=5, rate=40.0, mix="bimodal",
+                     chunk=16, min_prompt=4, max_prompt=32)
+    assert generate(spec, VOCAB) == generate(spec, VOCAB)
+
+
+def test_rate_changes_arrivals_not_prompts():
+    """Payload and arrival streams are split: an SLO sweep over rates
+    serves the exact same prompts on different schedules."""
+    slow = generate(TraceSpec(requests=12, seed=1, rate=5.0), VOCAB)
+    fast = generate(TraceSpec(requests=12, seed=1, rate=500.0), VOCAB)
+    assert [i.prompt for i in slow] == [i.prompt for i in fast]
+    assert [i.arrival_s for i in slow] != [i.arrival_s for i in fast]
+
+
+def test_seed_changes_both_streams():
+    a = generate(TraceSpec(requests=8, seed=1, rate=50.0), VOCAB)
+    b = generate(TraceSpec(requests=8, seed=2, rate=50.0), VOCAB)
+    assert [i.prompt for i in a] != [i.prompt for i in b]
+
+
+def test_closed_burst_arrives_at_zero():
+    items = generate(TraceSpec(requests=5, seed=0, rate=0.0), VOCAB)
+    assert [i.arrival_s for i in items] == [0.0] * 5
+
+
+def test_arrivals_are_monotone_and_start_at_zero():
+    items = generate(TraceSpec(requests=10, seed=3, rate=100.0), VOCAB)
+    arr = [i.arrival_s for i in items]
+    assert arr[0] == 0.0
+    assert arr == sorted(arr)
+
+
+def test_uniform_mix_bounds():
+    spec = TraceSpec(requests=64, seed=7, min_prompt=4, max_prompt=9)
+    for it in generate(spec, VOCAB):
+        assert 4 <= len(it.prompt) <= 9
+        assert all(0 <= t < VOCAB for t in it.prompt)
+
+
+def test_bimodal_mix_alternates_short_long():
+    spec = TraceSpec(requests=32, seed=7, mix="bimodal", chunk=8,
+                     min_prompt=4, max_prompt=24)
+    for i, it in enumerate(generate(spec, VOCAB)):
+        if i % 2 == 0:
+            assert 4 <= len(it.prompt) <= 8       # fits one chunk
+        else:
+            assert 9 <= len(it.prompt) <= 24      # spans several
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="requests"):
+        TraceSpec(requests=0)
+    with pytest.raises(ValueError, match="rate"):
+        TraceSpec(requests=1, rate=-1.0)
+    with pytest.raises(ValueError, match="mix"):
+        TraceSpec(requests=1, mix="zipf")
+    with pytest.raises(ValueError, match="min_prompt"):
+        TraceSpec(requests=1, min_prompt=9, max_prompt=4)
+    with pytest.raises(ValueError, match="bimodal"):
+        TraceSpec(requests=1, mix="bimodal", chunk=64, min_prompt=4,
+                  max_prompt=32)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        TraceSpec(requests=1, max_new_tokens=0)
+    with pytest.raises(ValueError, match="vocab_size"):
+        generate(TraceSpec(requests=1), 0)
+
+
+def test_item_request_overrides():
+    it = TraceItem(arrival_s=0.0, prompt=(1, 2, 3), max_new_tokens=4)
+    req = it.request(rid=9, deadline_s=1.5)
+    assert isinstance(req, Request)
+    assert req.rid == 9 and req.deadline_s == 1.5
+    assert tuple(req.prompt) == (1, 2, 3) and req.max_new_tokens == 4
+
+
+def test_replay_paces_open_loop_and_counts_shed():
+    """Virtual clock: replay sleeps exactly up to each absolute arrival
+    offset (open loop — lateness is never 'caught up' by shifting later
+    arrivals), sheds QueueFull without retrying, and returns futures in
+    submission order."""
+    items = [TraceItem(arrival_s=t, prompt=(1,), max_new_tokens=1)
+             for t in (0.0, 0.1, 0.25)]
+    now = [0.0]
+    sleeps = []
+
+    def clock():
+        return now[0]
+
+    def sleep(dt):
+        sleeps.append(round(dt, 6))
+        now[0] += dt
+
+    submitted = []
+
+    def submit(req):
+        submitted.append(req)
+        if len(submitted) == 2:
+            raise QueueFull(1)       # second arrival is shed
+        return f"fut{len(submitted)}"
+
+    futs, shed = replay(submit, items, clock=clock, sleep=sleep)
+    assert futs == ["fut1", "fut3"]
+    assert shed == 1
+    assert sleeps == [0.1, 0.15]     # absolute offsets, not fixed gaps
+
+
+def test_replay_forwards_request_kw_and_calls_callables():
+    items = [TraceItem(arrival_s=0.0, prompt=(1, 2), max_new_tokens=1)
+             for _ in range(3)]
+    seen = []
+    counter = iter(range(100))
+
+    def submit(req):
+        seen.append((req.deadline_s, req.extras))
+        return None
+
+    replay(submit, items,
+           request_kw={"deadline_s": 9.0,
+                       "extras": lambda: {"n": next(counter)}},
+           clock=lambda: 0.0, sleep=lambda dt: None)
+    assert [d for d, _ in seen] == [9.0] * 3
+    assert [e["n"] for _, e in seen] == [0, 1, 2]   # fresh per item
