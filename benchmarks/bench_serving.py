@@ -38,6 +38,13 @@ a greedy :class:`repro.serve.ServeEngine` on the smoke arch and emits:
   carries the aggregate p50/p95 TTFT **and end-to-end latency**
   percentiles — the tier's SLO figures — plus dispatch balance and the
   concurrency high-water-mark;
+* ``serve/chrome_trace`` — an UNTIMED artifact row: the page-starved
+  incremental + speculative trace drained through a one-replica Router
+  with a live :class:`repro.obs.Tracer`, exported to
+  ``BENCH_serve_trace.json`` (Chrome trace-event JSON; CI validates and
+  uploads it). Untimed by design — every gated row above runs under the
+  no-op ``NULL_TRACER``, so tracing overhead can never shift the
+  regression gate;
 * ``serve/large_pool`` — the 16-slot variant, emitted as *skipped* on CPU
   (one tick is minutes of wall clock at that batch) and timed on TPU.
 
@@ -120,12 +127,15 @@ def _run_engine(slots: int, requests: int, max_new: int, seed: int = 0,
 
 def _run_router(replicas: int, requests: int, max_new: int, rate: float,
                 seed: int = 0, slots: int = 2,
-                arch: str = "smollm-135m-smoke"):
+                arch: str = "smollm-135m-smoke", admission: str = "eager",
+                num_pages=None, spec_k: int = 0, tracer=None):
     """Open-loop SLO run: a seeded Poisson trace at ``rate`` req/s
     replayed through the Router over ``replicas`` warmed paged engines,
     one TickDriver thread multiplexing all of them. Returns the router
     snapshot, the shed count, and the wall seconds from first arrival to
-    last result."""
+    last result. ``tracer`` (a :class:`repro.obs.Tracer`) records the
+    timed drain's span timeline — burn-in spans are wiped by the
+    post-warmup ``reset_metrics``."""
     from repro.configs import registry
     from repro.serve import Router, ServeEngine, loader
     from repro.serve import trace as trace_lib
@@ -134,9 +144,11 @@ def _run_router(replicas: int, requests: int, max_new: int, rate: float,
     _, params = loader.load_for_serving(cfg, seed=0)
     engines = []
     rng = np.random.default_rng(seed)
-    for _ in range(replicas):
+    for i in range(replicas):
         e = ServeEngine(cfg, params, slots=slots, max_len=96,
-                        pool="paged", seed=seed)
+                        pool="paged", admission=admission,
+                        num_pages=num_pages, spec_k=spec_k,
+                        tracer=tracer, replica=i, seed=seed)
         # same burn-in discipline as the single-engine rows: warm the
         # chunk/decode compiles, then reset so cold TTFTs stay out of
         # the percentiles
@@ -252,6 +264,43 @@ def run(requests: int = 24, max_new: int = 8) -> None:
         f"max_concurrent={rsnap['max_concurrent_slots']};"
         f"shed={shed};requeued={rsnap['requeued']};"
         f"requests={rsnap['requests_finished']}")
+
+    # the observability artifact: the page-starved incremental trace with
+    # speculative decoding drained through a one-replica Router with a
+    # live Tracer, exported as Chrome trace-event JSON. The row is
+    # emitted UNTIMED (us_per_call=None — tracing overhead must never
+    # enter the regression gate; the timed rows above all run under the
+    # no-op NULL_TRACER), validated in-process here and again by the CI
+    # step `python -m repro.obs.validate BENCH_serve_trace.json` after
+    # upload. The derived column carries the event census so a trace
+    # that silently stops covering preemption/speculation fails loudly.
+    from repro.obs import Tracer
+    from repro.obs.validate import validate_chrome_trace
+
+    tracer = Tracer()
+    rsnap, _, _ = _run_router(replicas=1, requests=requests,
+                              max_new=max_new, rate=0.0, slots=4,
+                              arch="smollm-135m-butterfly-smoke",
+                              admission="incremental", num_pages=9,
+                              spec_k=3, tracer=tracer)
+    events = validate_chrome_trace(tracer.chrome_trace())
+    esnap = rsnap["per_replica"][0]["engine"]
+    assert esnap["preempted"] > 0, \
+        "trace artifact must cover a preemption; re-starve the pool"
+    assert esnap["spec"]["draft_tokens"] > 0, \
+        "trace artifact must cover speculative decode"
+    trace_path = "BENCH_serve_trace.json"
+    tracer.write_chrome_trace(trace_path)
+    names = {e["name"] for e in events}
+    common.emit(
+        "serve/chrome_trace", None,
+        f"status=artifact;path={trace_path};events={len(events)};"
+        f"spans={sum(1 for e in events if e['ph'] == 'X')};"
+        f"preempt_events={sum(1 for e in events if e['name'] == 'preempt')};"
+        f"spec_spans={sum(1 for e in events if e['name'] == 'spec')};"
+        f"has_grow_pages={'grow_pages' in names};"
+        f"dropped={tracer.dropped};"
+        f"requests={esnap['requests_finished']}")
 
     if jax.default_backend() == "tpu":
         snap, wall = _run_engine(slots=16, requests=4 * requests,

@@ -113,17 +113,25 @@ def main():
 
 
 def lifecycle_demo(cfg, params, rng):
-    """Preemption + cancellation on a deliberately page-starved engine."""
+    """Preemption + cancellation on a deliberately page-starved engine,
+    recorded by a live :class:`repro.obs.Tracer` — every request's
+    lifecycle (queue → admit → prefill chunks → decode → preempt →
+    recompute → finish) lands as spans exportable with
+    ``tracer.write_chrome_trace("trace.json")`` and viewable in
+    Perfetto. The serving CLI wires the same thing via ``--trace-out``."""
+    from repro.obs import Tracer
     from repro.serve import (Request, RequestCancelled, ServeClient,
                              ServeEngine)
 
     print("\n-- lifecycle demo: tiny pool, incremental admission --")
+    tracer = Tracer()
     try:
         # 2 slots but only 4 usable 8-token pages: both requests' full
         # budgets cannot co-reside, so incremental admission must preempt
         engine = ServeEngine(cfg, params, slots=2, max_len=32,
                              page_size=8, num_pages=5, prefill_chunk=4,
-                             admission="incremental", seed=0)
+                             admission="incremental", tracer=tracer,
+                             seed=0)
     except ValueError as e:
         print(f"  skipped: {e}")
         return
@@ -149,6 +157,15 @@ def lifecycle_demo(cfg, params, rng):
     print(f"  engine counters: preempted={snap['preempted']} "
           f"recompute_tokens={snap['recompute_tokens']} "
           f"cancelled={snap['cancelled']}")
+    counts = {}
+    for ev in tracer.events():
+        counts[ev["name"]] = counts.get(ev["name"], 0) + 1
+    print(f"  tracer recorded {len(tracer)} events: "
+          f"preempt={counts.get('preempt', 0)} "
+          f"cancel={counts.get('cancel', 0)} "
+          f"finish={counts.get('finish', 0)} "
+          f"ticks={counts.get('tick', 0)} "
+          f"(tracer.write_chrome_trace(path) -> Perfetto)")
 
 
 def router_demo(cfg, params):

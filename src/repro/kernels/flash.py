@@ -296,9 +296,12 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     the O(S²) probability matrix. ``block_q``/``block_kv`` default to the
     :mod:`repro.kernels.tuning` VMEM model; pass ints only to override.
     """
+    from repro.obs.profiling import annotate
     B, H, S, D = q.shape
     if block_q is None or block_kv is None:
         bq, bkv = tuning.flash_blocks(S, D, jnp.dtype(q.dtype).name, "bwd")
         block_q = block_q or bq
         block_kv = block_kv or bkv
-    return _flash_diff(q, k, v, causal, window, block_q, block_kv, interpret)
+    with annotate("flash_attention"):
+        return _flash_diff(q, k, v, causal, window, block_q, block_kv,
+                           interpret)

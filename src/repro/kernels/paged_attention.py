@@ -180,14 +180,16 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     :class:`~repro.kernels.context.ExecutionContext` (jnp oracle on CPU,
     Pallas on TPU, ``pallas_interpret`` under the test contexts).
     """
+    from repro.obs.profiling import annotate
     if backend is None:
         from repro.kernels import context as exctx
         ctx = exctx.current_execution()
         backend = exctx.resolve_backend(ctx.backend if ctx else "auto")
-    if backend == "jnp":
-        out = paged_attend_ref(q[:, None], k_pool, v_pool, page_table,
-                               cur_pos[:, None])
-        return out[:, 0]
-    return _paged_decode_pallas(q, k_pool, v_pool, page_table,
-                                jnp.asarray(cur_pos, jnp.int32),
-                                interpret=(backend == "pallas_interpret"))
+    with annotate("paged_attention"):
+        if backend == "jnp":
+            out = paged_attend_ref(q[:, None], k_pool, v_pool, page_table,
+                                   cur_pos[:, None])
+            return out[:, 0]
+        return _paged_decode_pallas(q, k_pool, v_pool, page_table,
+                                    jnp.asarray(cur_pos, jnp.int32),
+                                    interpret=(backend == "pallas_interpret"))

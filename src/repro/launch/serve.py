@@ -20,11 +20,20 @@ reservation with preempt-youngest/recompute (vLLM's policy);
 ``--queue-limit N`` sheds submits beyond N waiting with ``QueueFull``;
 ``--fault-seed S`` arms a seeded ``FaultInjector`` forcing ``PoolExhausted``
 at ``--fault-rate`` per allocation, so recovery paths run under load.
+
+Observability: ``--trace-out trace.json`` records per-request span
+timelines through one shared :class:`repro.obs.Tracer` (replica ``i`` is
+``pid i``) and exports Chrome trace-event JSON loadable in Perfetto;
+``--metrics-json`` writes the unified ``repro.serve/telemetry-1`` doc
+(lifecycle summary + metrics-registry snapshot), rewritten atomically
+every ``--metrics-interval`` seconds while serving.
 """
 
 import argparse
 import json
+import os
 import sys
+import threading
 
 # Simulated multi-device serving: the host device count must reach XLA
 # before jax initializes (jax-free helper shared with launch/train.py).
@@ -33,6 +42,15 @@ from repro.launch._prejax import apply_simulated_devices
 apply_simulated_devices(sys.argv)
 
 import numpy as np  # noqa: E402
+
+
+def _write_json_atomic(path: str, doc) -> None:
+    """Write-then-rename so a reader polling the path never sees a torn
+    doc (the periodic flusher rewrites it mid-run)."""
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, path)
 
 
 def main():
@@ -97,7 +115,17 @@ def main():
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-json", default="",
-                    help="write the engine metrics snapshot here")
+                    help="write the unified telemetry doc here "
+                         "(repro.serve/telemetry-1: lifecycle summary + "
+                         "metrics-registry snapshot)")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="with --metrics-json: atomically rewrite the "
+                         "telemetry doc every S seconds while serving "
+                         "(0 = final write only)")
+    ap.add_argument("--trace-out", default="",
+                    help="record per-request span timelines and write a "
+                         "Chrome trace-event JSON here (load in Perfetto); "
+                         "tracing stays off without this flag")
     ap.add_argument("--mesh-shape", default="",
                     help="serve over a butterfly data mesh, e.g. '8' or "
                          "'2x4' (requires a butterfly arch)")
@@ -108,6 +136,8 @@ def main():
 
     from repro.configs import registry
     from repro.kernels.context import ExecutionContext
+    from repro.obs import MetricsRegistry, Tracer
+    from repro.obs.tracing import NULL_TRACER
     from repro.serve import (FaultInjector, Router, SamplingParams,
                              ServeClient, ServeEngine, loader, trace)
 
@@ -135,6 +165,11 @@ def main():
                                rates={"pool.alloc": args.fault_rate})
                  if args.fault_seed >= 0 else None
                  for _ in range(args.replicas)]
+    # one registry and (when --trace-out) one tracer span every replica:
+    # replica i is pid i in the Chrome trace, and the registry keeps the
+    # per-replica families apart via the {"replica": i} label
+    obs_registry = MetricsRegistry()
+    tracer = Tracer() if args.trace_out else NULL_TRACER
     engines = [ServeEngine(
         cfg, params, slots=args.slots, max_len=args.max_len,
         pool=args.pool, page_size=args.page_size,
@@ -144,8 +179,9 @@ def main():
                                 top_k=args.top_k, top_p=args.top_p),
         admission=args.admission, spec_k=args.spec_k,
         queue_limit=args.queue_limit or None,
-        faults=faults, context=context, seed=args.seed)
-        for faults in injectors]
+        faults=faults, context=context, seed=args.seed,
+        tracer=tracer, registry=obs_registry, replica=i)
+        for i, faults in enumerate(injectors)]
     engine, faults = engines[0], injectors[0]
     print(f"[serve] {cfg.name} | params: {src} | slots={args.slots} "
           f"max_len={args.max_len} pool={engine.pool.kind} "
@@ -197,12 +233,31 @@ def main():
               f"tpot={m.tpot * 1e3:6.1f} ms "
               f"latency={m.latency * 1e3:7.1f} ms{pre}")
 
+    stop_flush = threading.Event()
+
+    def start_flusher(doc_fn):
+        # periodic telemetry flush: atomically rewrite --metrics-json
+        # every --metrics-interval seconds while the workload drains
+        if not (args.metrics_json and args.metrics_interval > 0):
+            return None
+        def loop():
+            while not stop_flush.wait(args.metrics_interval):
+                _write_json_atomic(args.metrics_json, doc_fn())
+        t = threading.Thread(target=loop, daemon=True,
+                             name="metrics-flush")
+        t.start()
+        return t
+
     if args.replicas == 1:
         with ServeClient(engine) as client:
+            flusher = start_flusher(engine.telemetry)
             futs, shed = trace.replay(client.submit, items,
                                       request_kw={"extras": extras})
             for fut in futs:
                 show(fut)
+            stop_flush.set()
+            if flusher is not None:
+                flusher.join(timeout=10)
         out = snap = engine.metrics.snapshot()
         print(f"[serve] {snap['requests_finished']} requests, "
               f"{snap['total_tokens']} tokens | decode "
@@ -230,10 +285,14 @@ def main():
     else:
         router = Router(engines)
         with router:
+            flusher = start_flusher(router.telemetry)
             futs, shed = trace.replay(router.submit, items,
                                       request_kw={"extras": extras})
             for fut in futs:
                 show(fut)
+            stop_flush.set()
+            if flusher is not None:
+                flusher.join(timeout=10)
         out = rsnap = router.snapshot()
         print(f"[serve] router: {rsnap['requests_finished']} requests "
               f"over {rsnap['replicas']} replicas | dispatched="
@@ -252,9 +311,16 @@ def main():
                   f"{e['pool']['pages_hwm']}/{e['pool']['total_pages']} "
                   f"preempted={e['preempted']}")
     if args.metrics_json:
-        with open(args.metrics_json, "w") as f:
-            json.dump(out, f, indent=1)
+        _write_json_atomic(args.metrics_json, {
+            "schema": "repro.serve/telemetry-1",
+            "summary": out,
+            "metrics": obs_registry.snapshot(),
+        })
         print(f"[serve] wrote {args.metrics_json}")
+    if args.trace_out:
+        tracer.write_chrome_trace(args.trace_out)
+        print(f"[serve] wrote {args.trace_out} "
+              f"({len(tracer)} trace events)")
 
 
 if __name__ == "__main__":

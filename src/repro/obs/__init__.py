@@ -1,0 +1,40 @@
+"""``repro.obs`` — process-wide observability: span tracing + metrics.
+
+Three pillars, all zero-dependency (stdlib only) so the serving tier can
+instrument itself without touching jax:
+
+* :mod:`repro.obs.tracing` — a bounded-ring :class:`Tracer` emitting
+  per-request and per-engine spans with wall-clock *and* deterministic
+  engine-tick timestamps, exported as Chrome trace-event JSON (loadable
+  in Perfetto / ``chrome://tracing``; one track per replica, one per
+  request). :data:`NULL_TRACER` is the always-installed no-op default, so
+  the tracing-off hot path costs a handful of no-op calls per tick.
+* :mod:`repro.obs.registry` — typed :class:`Counter` / :class:`Gauge` /
+  :class:`Histogram` primitives plus callback collectors in one
+  lock-protected :class:`MetricsRegistry`, with a stable JSON snapshot
+  schema (:data:`SNAPSHOT_SCHEMA`) and a Prometheus-style text
+  exposition. The serving engine, router, cache pool, fault injector and
+  compile cache all register into one registry — ONE machine-readable
+  telemetry surface instead of five ad-hoc dicts.
+* :mod:`repro.obs.profiling` — ``jax.profiler.TraceAnnotation`` wrappers
+  around the fused butterfly / sandwich / flash / paged-attention kernel
+  call sites, gated on the ambient
+  :class:`repro.kernels.context.ExecutionContext` (``profile=True``), so
+  device profiles line up with the engine's span names. Imported lazily
+  by the kernel modules — importing ``repro.obs`` itself never imports
+  jax.
+
+:mod:`repro.obs.validate` structurally validates Chrome trace-event JSON
+(every event carries ``ph/ts/pid/tid/name``, complete spans properly
+nested per track) — the CI artifact gate and the tests share it:
+``python -m repro.obs.validate trace.json``.
+"""
+
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                SNAPSHOT_SCHEMA)
+from repro.obs.tracing import NULL_TRACER, NullTracer, Tracer
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "SNAPSHOT_SCHEMA",
+]

@@ -1,0 +1,56 @@
+"""Device-profiler annotations gated on the ambient ExecutionContext.
+
+:func:`annotate` wraps a kernel call site in
+``jax.profiler.TraceAnnotation`` when profiling is enabled, so traces
+captured with ``jax.profiler.trace()`` / TensorBoard line up with the
+serving tier's span names (``butterfly_matmul``, ``flash_attention``,
+``paged_attention`` …). Enablement comes from the resolution order the
+kernels already use everywhere else:
+
+* an explicit :class:`~repro.kernels.context.ExecutionContext` passed by
+  the call site (the fused ops thread their finalized ``ctx`` through),
+* else the ambient ``use_execution(...)`` context,
+* else the ``REPRO_PROFILE=1`` environment variable.
+
+When profiling is off — the default — :func:`annotate` returns a shared
+``contextlib.nullcontext`` without importing ``jax.profiler``, so the
+hot path pays one attribute check. Note these annotations fire at trace
+time (the call sites run under ``jit``), so steady-state execution cost
+is zero either way.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import TYPE_CHECKING, ContextManager, Optional
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.kernels import context as exctx
+
+__all__ = ["annotate", "profiling_enabled"]
+
+_NULL = contextlib.nullcontext()
+
+
+def profiling_enabled(
+        ctx: Optional["exctx.ExecutionContext"] = None) -> bool:
+    """True when kernel call sites should emit profiler annotations."""
+    if ctx is None:
+        # deferred: repro.kernels.ops imports this module at load time,
+        # so a module-level import here would be circular
+        from repro.kernels import context as exctx
+        ctx = exctx.current_execution()
+    if ctx is not None and ctx.profile is not None:
+        return bool(ctx.profile)
+    return os.environ.get("REPRO_PROFILE", "").strip() in ("1", "true", "on")
+
+
+def annotate(name: str,
+             ctx: Optional["exctx.ExecutionContext"] = None
+             ) -> ContextManager:
+    """``jax.profiler.TraceAnnotation(name)`` if profiling, else a no-op."""
+    if not profiling_enabled(ctx):
+        return _NULL
+    import jax.profiler
+    return jax.profiler.TraceAnnotation(name)

@@ -279,6 +279,14 @@ class CachePool:
     def total_pages(self) -> int:
         return 0
 
+    def reset_stats(self) -> None:
+        """Rebase high-water statistics to the current occupancy.
+
+        ``engine.reset_metrics()`` calls this so bench warm-up artifacts
+        (burn-in ``pages_hwm``) don't survive into the measured window.
+        Live allocation state is untouched."""
+        return None
+
 
 class DenseCachePool(CachePool):
     """The PR-5 dense pooled cache: one full ``max_len`` row per slot."""
@@ -412,6 +420,9 @@ class PagedCachePool(CachePool):
     @property
     def total_pages(self) -> int:
         return self.num_pages
+
+    def reset_stats(self) -> None:
+        self._hwm = self.pages_in_use
 
     def free_list(self) -> Tuple[int, ...]:
         """Snapshot of the free list (allocation order) — test surface."""

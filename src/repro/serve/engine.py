@@ -109,6 +109,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels import context as exctx
+from repro.obs.registry import MetricsRegistry
+from repro.obs.tracing import NULL_TRACER, TRACK_ENGINE
 from repro.runtime import sharding as rsh
 from repro.serve import cache as cache_lib
 from repro.serve import sampling as sampling_lib
@@ -123,24 +125,58 @@ from repro.train import steps as steps_lib
 SEQUENTIAL_STATE_BLOCKS = ("rec", "mlstm", "slstm", "local")
 
 
+def _fmt_compile_key(key: Tuple) -> str:
+    """Human/JSON-safe rendering of a compile key — ExecutionContext
+    members render through their one-line ``describe()``."""
+    return " | ".join(
+        k.describe() if hasattr(k, "describe") else str(k) for k in key)
+
+
 class CompileCache:
-    """Explicit jit cache with a trace counter.
+    """Explicit jit cache with a trace counter and structured events.
 
     ``get(key, build)`` memoizes the *compiled callable* per key;
     :meth:`counted_jit` wraps the pre-jit function so every retrace bumps
     ``traces[key]`` (the function body only executes while jax traces —
     cached executions never touch it). The serving tests gate on exactly
     this counter: one trace per (shape, context), ever.
+
+    Cold compiles are structured events: the first call through a key is
+    timed and emitted as a ``compile`` span on the tracer's engine lane
+    (args carry the formatted key + wall seconds) and appended to
+    ``events``, so compile storms are visible per-replica in the Chrome
+    trace. The timing wrapper replaces itself after the first call, so
+    warm calls pay nothing.
     """
 
-    def __init__(self):
+    def __init__(self, tracer=None, pid: int = 0):
         self._fns: Dict[Tuple, Callable] = {}
         self.traces: Dict[Tuple, int] = {}
+        self.events: List[Dict] = []
+        self._tracer = tracer if tracer is not None else NULL_TRACER
+        self._pid = int(pid)
 
     def get(self, key: Tuple, build: Callable[[], Callable]) -> Callable:
         fn = self._fns.get(key)
         if fn is None:
-            fn = self._fns[key] = build()
+            inner = build()
+
+            def cold(*args, __key=key, __inner=inner, **kwargs):
+                t0 = time.monotonic()
+                tt0 = self._tracer.now()
+                out = __inner(*args, **kwargs)
+                self._fns[__key] = __inner   # warm path: straight through
+                dt = time.monotonic() - t0
+                self.events.append(
+                    {"key": _fmt_compile_key(__key),
+                     "seconds": round(dt, 6)})
+                self._tracer.complete(
+                    "compile", tt0, self._tracer.now(), pid=self._pid,
+                    tid=TRACK_ENGINE, cat="compile",
+                    key=_fmt_compile_key(__key), seconds=round(dt, 6))
+                return out
+
+            fn = self._fns[key] = cold
         return fn
 
     def counted_jit(self, key: Tuple, fn: Callable, **jit_kw) -> Callable:
@@ -276,6 +312,10 @@ class _Slot:
     #                                        state at the last committed
     #                                        input position — the draft
     #                                        state seed (spec_k > 0)
+    trace_t0: float = 0.0                  # tracer timestamp of the last
+    #                                        queue entry (submit / preempt
+    #                                        requeue / adopt) — the start
+    #                                        of the next "queue" span
 
     def __post_init__(self):
         if self.prefill_seq is None:
@@ -330,6 +370,18 @@ class ServeEngine:
       reproducible schedule.
     * ``context`` — execution policy; resolved once here, exactly like the
       ``Trainer`` (explicit > ambient > ``cfg.butterfly`` > env/platform).
+    * ``tracer`` — a :class:`repro.obs.Tracer` recording the span
+      timeline (per-request lanes ``tid = rid + 1``, engine lane
+      ``tid = 0``, process row ``pid = replica``). Default: the no-op
+      :data:`~repro.obs.NULL_TRACER` — tracing off costs nothing
+      measurable (gated by the ``serve/trace_e2e`` bench row).
+    * ``registry`` — a :class:`repro.obs.MetricsRegistry` this engine
+      registers its collectors into (callbacks reading the live
+      counters, labelled ``{"replica": str(replica)}``); pass one shared
+      registry across replicas for a single exposition surface. Default:
+      a private registry (``engine.obs``).
+    * ``replica`` — replica id: the trace ``pid`` and the ``replica``
+      metric label.
     * ``scrub_freed_slots`` — re-init a slot's cache state when its request
       finishes; off by default since admission overwrites it anyway.
     """
@@ -343,7 +395,9 @@ class ServeEngine:
                  queue_limit: Optional[int] = None,
                  faults=None,
                  context: exctx.ContextLike = None, seed: int = 0,
-                 min_bucket: int = 8, scrub_freed_slots: bool = False):
+                 min_bucket: int = 8, scrub_freed_slots: bool = False,
+                 tracer=None, registry: Optional[MetricsRegistry] = None,
+                 replica: int = 0):
         if slots < 1:
             raise ValueError(f"need at least one slot, got {slots}")
         if admission not in ("eager", "incremental"):
@@ -413,10 +467,19 @@ class ServeEngine:
         self._admit_seq = 0
         self._cancels: set = set()
         self._key = jax.random.PRNGKey(seed)
-        self.compile_cache = CompileCache()
+        self.replica = int(replica)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.obs = registry if registry is not None else MetricsRegistry()
+        self._name_tracks()
+        self.compile_cache = CompileCache(tracer=self.tracer,
+                                          pid=self.replica)
         self.metrics = self._fresh_metrics()
         self._sample_fn = functools.partial(sampling_lib.sample_logits,
                                             params=sampling)
+        self._tick_hist = self.obs.histogram(
+            "serve_tick_seconds", "wall time per engine tick",
+            labels={"replica": str(self.replica)})
+        self._register_obs()
 
     def _fresh_metrics(self, history: int = 1024) -> EngineMetrics:
         return EngineMetrics(slots=self.slots, max_request_history=history,
@@ -424,6 +487,139 @@ class ServeEngine:
                              admission=self.admission,
                              total_pages=self.pool.total_pages,
                              spec_k=self.spec_k)
+
+    # -- observability ------------------------------------------------
+
+    def _name_tracks(self) -> None:
+        self.tracer.name_process(
+            self.replica, f"replica {self.replica} · {self.cfg.name}")
+        self.tracer.name_track(self.replica, TRACK_ENGINE, "engine")
+
+    def _register_obs(self) -> None:
+        """Register this engine's collectors into ``self.obs``.
+
+        Everything is a callback closing over ``self`` — NOT over the
+        current ``EngineMetrics`` object — so ``reset_metrics()``'s
+        object swap is transparently reflected, and recording costs the
+        hot path nothing (values are read lazily at collection time).
+        Re-registering under the same ``(name, labels)`` replaces the
+        old callback, so rebuilding an engine against a shared registry
+        (checkpoint swap, tests) never errors.
+        """
+        reg = self.obs
+        labels = {"replica": str(self.replica)}
+
+        def counter(name, fn, help):
+            reg.register_callback(name, fn, mtype="counter", help=help,
+                                  labels=labels)
+
+        def gauge(name, fn, help):
+            reg.register_callback(name, fn, mtype="gauge", help=help,
+                                  labels=labels)
+
+        counter("serve_ticks_total", lambda: self.metrics.ticks,
+                "engine ticks (the deterministic clock)")
+        counter("serve_requests_finished_total",
+                lambda: self.metrics.requests_finished,
+                "requests finished (lifetime)")
+        counter("serve_finished_tokens_total",
+                lambda: self.metrics.finished_tokens,
+                "tokens over finished requests (lifetime)")
+        counter("serve_decode_steps_total",
+                lambda: self.metrics.decode_steps,
+                "pooled decode tick invocations")
+        counter("serve_decode_tokens_total",
+                lambda: self.metrics.decode_tokens,
+                "tokens emitted by pooled decode ticks")
+        counter("serve_prefills_total", lambda: self.metrics.prefills,
+                "prompts prefilled")
+        counter("serve_prefill_tokens_total",
+                lambda: self.metrics.prefill_tokens,
+                "prompt tokens processed (pre-padding)")
+        counter("serve_chunk_ticks_total",
+                lambda: self.metrics.chunk_ticks,
+                "chunked-prefill pool invocations")
+        counter("serve_preempted_total", lambda: self.metrics.preempted,
+                "slots kicked mid-flight for pages")
+        counter("serve_recompute_tokens_total",
+                lambda: self.metrics.recompute_tokens,
+                "already-computed tokens re-prefilled after preemption")
+        counter("serve_cancelled_total", lambda: self.metrics.cancelled,
+                "requests cancelled by the client")
+        counter("serve_deadline_expired_total",
+                lambda: self.metrics.deadline_expired,
+                "requests failed on their deadline")
+        counter("serve_rejected_queue_full_total",
+                lambda: self.metrics.rejected_queue_full,
+                "submits shed by the bounded queue")
+        counter("serve_pool_exhausted_total",
+                lambda: self.metrics.pool_exhausted_events,
+                "admissions/growth deferred or kicked on PoolExhausted")
+        counter("serve_spec_ticks_total", lambda: self.metrics.spec_ticks,
+                "speculative decode pool invocations")
+        counter("serve_spec_draft_tokens_total",
+                lambda: self.metrics.draft_tokens,
+                "draft proposals into the verify pass")
+        counter("serve_spec_accepted_draft_tokens_total",
+                lambda: self.metrics.accepted_draft_tokens,
+                "draft proposals that survived verification")
+        counter("serve_decode_time_seconds_total",
+                lambda: self.metrics.decode_time_s,
+                "wall seconds inside pooled decode calls")
+        counter("serve_prefill_time_seconds_total",
+                lambda: self.metrics.prefill_time_s,
+                "wall seconds inside prefill calls")
+        counter("serve_compiles_total",
+                lambda: self.compile_cache.compiles,
+                "cold compiles through the CompileCache")
+        counter("serve_compile_traces_total",
+                lambda: sum(self.compile_cache.traces.values()),
+                "jit (re)traces across all compile keys")
+        counter("serve_trace_dropped_total", lambda: self.tracer.dropped,
+                "trace events evicted from the bounded ring")
+        gauge("serve_slots", lambda: self.slots, "decode lanes")
+        gauge("serve_occupied_slots", lambda: self.occupied_slots(),
+              "lanes currently holding an admitted request")
+        gauge("serve_queue_depth", lambda: self.queued(),
+              "requests waiting for admission")
+        gauge("serve_max_concurrent_slots",
+              lambda: self.metrics.max_concurrent_slots,
+              "high-water mark of occupied slots")
+        gauge("serve_spec_k", lambda: self.spec_k,
+              "draft tokens proposed per slot tick (0 = off)")
+        gauge("serve_pages_total", lambda: self.pool.total_pages,
+              "physical pages incl. the trash page")
+        gauge("serve_pages_in_use", lambda: self.pool.pages_in_use,
+              "pages currently allocated to slots")
+        gauge("serve_pages_hwm", lambda: self.pool.pages_hwm,
+              "allocator high-water mark (rebased by reset_metrics)")
+        gauge("serve_trace_events", lambda: len(self.tracer),
+              "events currently buffered in the trace ring")
+        inj = self.faults
+        if inj is not None and hasattr(inj, "calls") \
+                and hasattr(inj, "fired"):
+            from repro.serve.faults import SITES
+            for site in SITES:
+                reg.register_callback(
+                    "serve_fault_calls_total",
+                    (lambda s=site: self.faults.calls.get(s, 0)),
+                    mtype="counter",
+                    help="instrumented fault-site checks",
+                    labels={**labels, "site": site})
+                reg.register_callback(
+                    "serve_fault_fired_total",
+                    (lambda s=site: self.faults.fired.get(s, 0)),
+                    mtype="counter",
+                    help="fault-site checks that fired",
+                    labels={**labels, "site": site})
+
+    def telemetry(self) -> Dict:
+        """The unified telemetry document: the registry snapshot (ONE
+        schema across engine/pool/faults/compile-cache) plus the
+        human-oriented summary dict."""
+        return {"schema": "repro.serve/telemetry-1",
+                "summary": self.metrics.snapshot(),
+                "metrics": self.obs.snapshot()}
 
     # -- execution scope ----------------------------------------------
 
@@ -569,6 +765,9 @@ class ServeEngine:
                 # bounded queue: shed load with a typed error the caller
                 # can retry on, instead of queueing unboundedly
                 self.metrics.on_queue_full()
+                self.tracer.instant("shed", pid=self.replica,
+                                    tid=TRACK_ENGINE, reason="queue_full",
+                                    prompt_len=plen)
                 raise QueueFull(self.queue_limit)
             if request.rid is None:
                 rid = self._next_rid
@@ -579,6 +778,7 @@ class ServeEngine:
             self._next_rid = max(self._next_rid, rid) + 1
             slot = _Slot(req=request, rid=rid, future=Future(),
                          prompt=np.asarray(request.prompt, np.int32))
+            slot.trace_t0 = self.tracer.now()
             self.metrics.on_submit(rid, slot.prompt.size)
             self._queue.append(slot)
         return slot.future
@@ -645,6 +845,9 @@ class ServeEngine:
                 raise ValueError(f"rid {slot.rid} is already live on "
                                  f"this replica")
             self._next_rid = max(self._next_rid, slot.rid + 1)
+            # the queue span restarts on THIS replica's tracer timeline
+            # (timestamps are per-tracer epochs, not transferable)
+            slot.trace_t0 = self.tracer.now()
             if record is not None:
                 self.metrics.adopt(record)
             else:
@@ -686,6 +889,10 @@ class ServeEngine:
                 self._release_slot(i)
                 dead.append(s)
         self.metrics.sync_pool(self.pool)
+        if dead:
+            self.tracer.instant("abort", pid=self.replica,
+                                tid=TRACK_ENGINE, count=len(dead),
+                                error=repr(exc))
         for s in dead:
             self.metrics.evict(s.rid)
             if not s.future.done():
@@ -722,11 +929,24 @@ class ServeEngine:
 
     def reset_metrics(self) -> None:
         """Fresh metrics (tick clock included) without touching compiled
-        state or the pool — a benchmark warms every bucket, resets, then
-        measures a compile-free steady state. Only valid while no request
-        is in flight (in-flight RequestMetrics would be orphaned)."""
+        state or the pool's *allocations* — a benchmark warms every
+        bucket, resets, then measures a compile-free steady state. Only
+        valid while no request is in flight (in-flight RequestMetrics
+        would be orphaned).
+
+        Rebases everything burn-in could have inflated: the pool's
+        high-water stats (``pages_hwm`` used to survive reset through
+        ``sync_pool`` re-importing the allocator's stale ``_hwm`` — the
+        regression test in ``tests/test_obs.py`` pins the fix) and the
+        tracer ring (burn-in spans would pollute the exported timeline).
+        Registry callbacks read through ``self``, so the object swap is
+        invisible to the unified telemetry surface.
+        """
         if self.has_work():
             raise RuntimeError("reset_metrics with requests in flight")
+        self.pool.reset_stats()
+        self.tracer.clear()
+        self._name_tracks()          # clear() drops the track-name maps
         self.metrics = self._fresh_metrics(
             history=self.metrics.max_request_history)
         self.metrics.sync_pool(self.pool)
@@ -739,6 +959,9 @@ class ServeEngine:
         admission), advance chunked prefills by one chunk, then one
         pooled decode. Returns the number of slots still active after
         the tick."""
+        tick = self.metrics.ticks
+        t_wall = time.monotonic()
+        tt0 = self.tracer.now()
         self._process_cancels()
         self._expire_deadlines()
         self._admit()
@@ -756,7 +979,12 @@ class ServeEngine:
         if any(s is not None and s.decoding for s in self._slots):
             self._decode_tick()
         self.metrics.on_tick()
-        return sum(s is not None for s in self._slots)
+        active = sum(s is not None for s in self._slots)
+        self.tracer.complete("tick", tt0, self.tracer.now(),
+                             pid=self.replica, tid=TRACK_ENGINE,
+                             tick=tick, active=active)
+        self._tick_hist.observe(time.monotonic() - t_wall)
+        return active
 
     def run_until_idle(self, max_ticks: int = 100_000) -> int:
         """Drive ticks until queue and pool drain; returns ticks spent."""
@@ -807,6 +1035,15 @@ class ServeEngine:
 
     def _admit_one(self, slot: _Slot, idx: int) -> None:
         self.metrics.on_admit(slot.rid)
+        tid = slot.rid + 1
+        tnow = self.tracer.now()
+        self.tracer.name_track(self.replica, tid, f"req {slot.rid}")
+        self.tracer.complete("queue", slot.trace_t0, tnow,
+                             pid=self.replica, tid=tid, rid=slot.rid,
+                             resume=bool(slot.tokens))
+        self.tracer.instant("admit", pid=self.replica, tid=tid, ts=tnow,
+                            rid=slot.rid, slot=idx,
+                            tick=self.metrics.ticks)
         slot.admit_seq = self._admit_seq
         self._admit_seq += 1
         if self.prefill_chunk is not None:
@@ -832,6 +1069,7 @@ class ServeEngine:
             batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
         last_pos = jnp.asarray([plen - 1], jnp.int32)
         t0 = time.monotonic()
+        tt0 = self.tracer.now()
         with self._scope():
             logits, sub = self._prefill_fn(bucket)(self._params, batch,
                                                    last_pos)
@@ -842,6 +1080,10 @@ class ServeEngine:
             tok = int(self._first_token_fn()(
                 logits, jax.random.fold_in(self._key, slot.rid))[0])
         self.metrics.on_prefill_work(plen, time.monotonic() - t0)
+        self.tracer.complete("prefill", tt0, self.tracer.now(),
+                             pid=self.replica, tid=slot.rid + 1,
+                             rid=slot.rid, bucket=bucket, tokens=plen,
+                             recompute=bool(slot.tokens))
         if slot.tokens:
             # resumed after preemption: this prefill recomputed an
             # already-counted prefix, and the sampled token is the NEXT
@@ -852,6 +1094,9 @@ class ServeEngine:
         else:
             self.metrics.on_prefill_done()
             self.metrics.on_first_token(slot.rid)
+            self.tracer.instant("first_token", pid=self.replica,
+                                tid=slot.rid + 1, rid=slot.rid,
+                                tick=self.metrics.ticks)
             slot.tokens = [tok]
         slot.last_token = tok
         slot.cur_pos = self._n_front + plen
@@ -888,6 +1133,10 @@ class ServeEngine:
                 hit.append(s)
         if hit:
             self.metrics.sync_pool(self.pool)
+        for s in hit:
+            self.tracer.instant("cancel", pid=self.replica,
+                                tid=s.rid + 1, rid=s.rid,
+                                tick=self.metrics.ticks)
         self._resolve_dead([(s, RequestCancelled(s.rid)) for s in hit],
                            self.metrics.on_cancel)
 
@@ -929,6 +1178,10 @@ class ServeEngine:
                 expired.append((s, r))
         if expired:
             self.metrics.sync_pool(self.pool)
+        for s, r in expired:
+            self.tracer.instant("deadline", pid=self.replica,
+                                tid=s.rid + 1, rid=s.rid, reason=r,
+                                tick=self.metrics.ticks)
         self._resolve_dead(
             [(s, DeadlineExceeded(s.rid, r)) for s, r in expired],
             self.metrics.on_deadline)
@@ -954,6 +1207,10 @@ class ServeEngine:
         s.last_token = -1
         s.anchor = None          # recompute re-derives it (final chunk)
         self.metrics.on_preempt(s.rid, computed)
+        self.tracer.instant("preempt", pid=self.replica, tid=s.rid + 1,
+                            rid=s.rid, computed=computed,
+                            tick=self.metrics.ticks)
+        s.trace_t0 = self.tracer.now()   # back in the queue: new span
         with self._lock:
             self._queue.appendleft(s)
 
@@ -968,6 +1225,7 @@ class ServeEngine:
         order = sorted(
             (i for i, s in enumerate(self._slots) if s is not None),
             key=lambda i: self._slots[i].admit_seq)
+        tt0 = self.tracer.now()
         for i in order:
             s = self._slots[i]
             if s is None:                  # preempted as a younger victim
@@ -1003,6 +1261,11 @@ class ServeEngine:
                     if victim == i:
                         break              # kicked ourselves; slot is gone
         self.metrics.sync_pool(self.pool)
+        if order:
+            self.tracer.complete("grow_pages", tt0, self.tracer.now(),
+                                 pid=self.replica, tid=TRACK_ENGINE,
+                                 tick=self.metrics.ticks,
+                                 pages_in_use=self.pool.pages_in_use)
 
     def _chunk_tick(self) -> None:
         """Advance every prefilling slot by one prompt chunk (one pooled
@@ -1027,14 +1290,25 @@ class ServeEngine:
             active[i] = True
             spans[i] = (lo, hi)
         t0 = time.monotonic()
+        tt0 = self.tracer.now()
         with self._scope():
             logits, h_last, self._caches = self._chunk_fn()(
                 self._params, jnp.asarray(tokens), self._caches,
                 jnp.asarray(start), jnp.asarray(last),
                 jnp.asarray(active), self.pool.gather_args()["page_table"])
+        tt1 = self.tracer.now()
         real = sum(hi - lo for lo, hi in spans.values())
         self.metrics.on_prefill_work(real, time.monotonic() - t0,
                                      chunked=True)
+        self.tracer.complete("prefill_chunk", tt0, tt1, pid=self.replica,
+                             tid=TRACK_ENGINE, slots=len(live),
+                             tokens=real, tick=self.metrics.ticks)
+        for i, s in live:
+            lo, hi = spans[i]
+            self.tracer.complete(f"prefill_chunk[{lo // C}]", tt0, tt1,
+                                 pid=self.replica, tid=s.rid + 1,
+                                 rid=s.rid, lo=lo, hi=hi,
+                                 recompute=bool(s.tokens))
         finishers = []
         anchors = np.asarray(h_last) if self.spec_k else None
         for i, s in live:
@@ -1055,6 +1329,9 @@ class ServeEngine:
             else:
                 self.metrics.on_prefill_done()
                 self.metrics.on_first_token(s.rid)
+                self.tracer.instant("first_token", pid=self.replica,
+                                    tid=s.rid + 1, rid=s.rid,
+                                    tick=self.metrics.ticks)
             s.tokens.append(tok)
             s.last_token = tok
             s.cur_pos = self._n_front + int(s.prefill_seq.size)
@@ -1094,6 +1371,10 @@ class ServeEngine:
         rm = self.metrics.on_finish(slot.rid)
         self._release_slot(idx)
         self.metrics.sync_pool(self.pool)
+        self.tracer.instant("finish", pid=self.replica,
+                            tid=slot.rid + 1, rid=slot.rid,
+                            new_tokens=len(slot.tokens),
+                            tick=self.metrics.ticks)
         slot.future.set_result(GenerationResult(
             rid=slot.rid, prompt=slot.prompt,
             tokens=list(slot.tokens), metrics=rm))
@@ -1113,6 +1394,7 @@ class ServeEngine:
         n_active = int(active.sum())
         rng = jax.random.fold_in(self._key, 0x5E57E9 + self.metrics.ticks)
         t0 = time.monotonic()
+        tt0 = self.tracer.now()
         step_args = [self._params, jnp.asarray(tokens), self._caches,
                      jnp.asarray(cur_pos), rng, jnp.asarray(active)]
         if self.pool.kind == "paged":
@@ -1120,8 +1402,12 @@ class ServeEngine:
         with self._scope():
             nxt, self._caches = self._decode_fn()(*step_args)
         nxt = np.asarray(nxt)
+        tt1 = self.tracer.now()
         self.metrics.on_decode_tick(n_active, n_active,
                                     time.monotonic() - t0)
+        self.tracer.complete("decode", tt0, tt1, pid=self.replica,
+                             tid=TRACK_ENGINE, active=n_active,
+                             tick=self.metrics.ticks)
         for i, s in enumerate(self._slots):
             if s is None or s.prefilling:
                 continue
@@ -1130,6 +1416,9 @@ class ServeEngine:
             s.last_token = tok
             s.cur_pos += 1
             self.metrics.on_token(s.rid)
+            self.tracer.complete("decode", tt0, tt1, pid=self.replica,
+                                 tid=s.rid + 1, rid=s.rid, token=tok,
+                                 pos=s.cur_pos)
             if self._finished(s):
                 self._finish(i)
 
@@ -1160,15 +1449,24 @@ class ServeEngine:
             active[i] = True
             anchors[i] = s.anchor
         t0 = time.monotonic()
+        tt0 = self.tracer.now()
         with self._scope():
             drafts = self._draft_fn()(self._params, jnp.asarray(anchors),
                                       jnp.asarray(tokens[:, 0]))
             tokens[:, 1:] = np.asarray(drafts)
+            ttd = self.tracer.now()
             targets, accepted, anchor_out, self._caches = \
                 self._spec_verify_fn()(
                     self._params, jnp.asarray(tokens), self._caches,
                     jnp.asarray(cur_pos), jnp.asarray(active),
                     self.pool.gather_args()["page_table"])
+        tt1 = self.tracer.now()
+        self.tracer.complete("spec_draft", tt0, ttd, pid=self.replica,
+                             tid=TRACK_ENGINE, slots=len(live),
+                             tick=self.metrics.ticks)
+        self.tracer.complete("spec_verify", ttd, tt1, pid=self.replica,
+                             tid=TRACK_ENGINE, slots=len(live),
+                             tick=self.metrics.ticks)
         targets = np.asarray(targets)
         accepted = np.asarray(accepted)
         anchor_out = np.asarray(anchor_out)
@@ -1186,6 +1484,11 @@ class ServeEngine:
             s.anchor = anchor_out[i]
             committed_total += len(toks)
             self.metrics.on_token(s.rid, len(toks))
+            self.tracer.complete("spec", tt0, tt1, pid=self.replica,
+                                 tid=s.rid + 1, rid=s.rid,
+                                 drafted=self.spec_k,
+                                 accepted=int(accepted[i]),
+                                 committed=len(toks))
         self.metrics.on_spec_tick(
             drafted=len(live) * self.spec_k,
             accepted=int(accepted[[i for i, _ in live]].sum()))

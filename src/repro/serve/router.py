@@ -56,6 +56,7 @@ from concurrent.futures import Future
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
+from repro.obs.tracing import TRACK_ENGINE
 from repro.serve.client import TickDriver
 from repro.serve.engine import QueueFull, Request, ServeEngine
 from repro.serve.loader import restore_params
@@ -96,11 +97,19 @@ class Router:
     :meth:`step` / :meth:`run_until_idle` (deterministic tests), or call
     :meth:`start` (or enter the context manager) to attach the one
     driver thread. ``submit()`` is thread-safe either way.
+
+    Observability: ``tracer``/``registry`` default to replica 0's, so a
+    tier built over engines sharing one :class:`repro.obs.Tracer` and
+    one :class:`repro.obs.MetricsRegistry` gets router lifecycle events
+    (``drain``/``undrain``/``swap_checkpoint``/``replica_dead`` on the
+    target replica's engine lane) and the tier counters
+    (``router_*`` callbacks) on the same unified surface.
     """
 
     def __init__(self, engines: Sequence[ServeEngine], *,
                  weights: Optional[Sequence[float]] = None,
-                 tick_timeout: Optional[float] = None):
+                 tick_timeout: Optional[float] = None,
+                 tracer=None, registry=None):
         engines = list(engines)
         if not engines:
             raise ValueError("need at least one engine replica")
@@ -136,6 +145,36 @@ class Router:
         self.swaps = 0
         self.passes = 0                        # step() calls that found work
         self.max_concurrent = 0                # aggregate occupied-slot HWM
+        self.tracer = tracer if tracer is not None else engines[0].tracer
+        self.obs = registry if registry is not None else engines[0].obs
+        self._register_obs()
+
+    def _register_obs(self) -> None:
+        """Tier-level callbacks into the shared registry (newest wins on
+        re-register, so rebuilding a router over the same registry is
+        fine)."""
+        reg = self.obs
+
+        def cb(name, fn, mtype, help):
+            reg.register_callback(name, fn, mtype=mtype, help=help)
+
+        cb("router_requeued_total", lambda: self.requeued, "counter",
+           "queued requests moved across replicas (drain/death)")
+        cb("router_shed_total", lambda: self.shed, "counter",
+           "submits shed by EVERY live replica (tier-level QueueFull)")
+        cb("router_drains_total", lambda: self.drains, "counter",
+           "replica drains initiated")
+        cb("router_swaps_total", lambda: self.swaps, "counter",
+           "checkpoint hot-swaps completed")
+        cb("router_passes_total", lambda: self.passes, "counter",
+           "round-robin passes that found work")
+        cb("router_max_concurrent_slots", lambda: self.max_concurrent,
+           "gauge", "aggregate occupied-slot high-water mark")
+        cb("router_replicas", lambda: len(self.replicas), "gauge",
+           "configured replicas")
+        cb("router_replicas_live",
+           lambda: sum(r.live for r in self.replicas), "gauge",
+           "replicas eligible for dispatch (not dead, not draining)")
 
     # -- lifecycle ------------------------------------------------------
 
@@ -262,12 +301,18 @@ class Router:
             if not r.draining:
                 r.draining = True
                 self.drains += 1
+                self.tracer.instant("drain", pid=r.engine.replica,
+                                    tid=TRACK_ENGINE, replica=i)
         if self._driver is not None:
             self._driver.wake()
 
     def undrain(self, i: int) -> None:
         """Return replica ``i`` to the dispatch rotation."""
         with self._lock:
+            if self.replicas[i].draining:
+                self.tracer.instant(
+                    "undrain", pid=self.replicas[i].engine.replica,
+                    tid=TRACK_ENGINE, replica=i)
             self.replicas[i].draining = False
 
     def drained(self, i: int) -> bool:
@@ -303,6 +348,7 @@ class Router:
         Returns the restored step. The replica is undrained even when
         the restore fails — it still holds its old, consistent params."""
         r = self.replicas[i]
+        tt0 = self.tracer.now()
         self.drain(i)
         try:
             self.wait_drained(i, timeout=timeout)
@@ -314,6 +360,9 @@ class Router:
             r.engine.set_params(params)
             with self._lock:
                 self.swaps += 1
+            self.tracer.complete("swap_checkpoint", tt0, self.tracer.now(),
+                                 pid=r.engine.replica, tid=TRACK_ENGINE,
+                                 replica=i, step=int(step))
         finally:
             self.undrain(i)
         return step
@@ -409,6 +458,8 @@ class Router:
         r = self.replicas[i]
         with self._lock:
             r.dead = exc
+        self.tracer.instant("replica_dead", pid=r.engine.replica,
+                            tid=TRACK_ENGINE, replica=i, error=repr(exc))
         stolen = r.engine.drain_queued()
         r.engine.abort_all(exc)          # fails in-flight futures
         for slot, record in stolen:
@@ -461,4 +512,14 @@ class Router:
                 "p95": round(_percentile(lats, 0.95) * 1e3, 3),
             },
             "per_replica": per,
+        }
+
+    def telemetry(self) -> Dict:
+        """Unified telemetry doc: the tier ``snapshot()`` summary plus the
+        shared registry's stable-schema metrics dump (same shape as
+        :meth:`ServeEngine.telemetry`)."""
+        return {
+            "schema": "repro.serve/telemetry-1",
+            "summary": self.snapshot(),
+            "metrics": self.obs.snapshot(),
         }
